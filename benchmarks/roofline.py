@@ -1,0 +1,92 @@
+"""Aggregate the dry-run artifacts into the EXPERIMENTS.md roofline table.
+
+Reads results/roofline_unrolled/*.json (written by repro.launch.dryrun
+--unroll: layers unrolled so XLA cost_analysis counts every layer) and
+prints a markdown table with, per (arch x cell):
+
+  compute_s     HLO flops / chip peak           (exact from unrolled HLO)
+  memory_s      two numbers: XLA bytes-accessed / HBM-bw (UPPER bound: the
+                CPU pipeline doesn't fuse like Mosaic) and the analytic
+                irreducible-stream LOWER bound (params+grads+opt+acts+KV)
+  collective_s  parsed collective result-bytes / ICI-bw
+  bottleneck    argmax(compute, memory_LB, collective) — the conservative
+                call; when XLA-UB >> LB the truth is in between
+  useful        MODEL_FLOPS / HLO_FLOPS_global (remat/replication waste)
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def load(dirpath):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(f) as fh:
+            rows.append(json.load(fh))
+    return rows
+
+
+def enrich(r):
+    """Attach analytic memory LB and recompute the dominant term."""
+    if r["status"] != "ok" or r["arch"] == "trueknn":
+        return r
+    from repro.configs import get_config
+    from repro.launch import analysis
+    from repro.launch.shapes import CELLS
+
+    cfg = get_config(r["arch"])
+    cell = CELLS[r["cell"]]
+    mem_lb_bytes = analysis.model_memory_bytes(cfg, cell, r["n_chips"])
+    ro = r["roofline"]
+    ro["memory_lb_s"] = mem_lb_bytes / analysis.HBM_BW
+    terms = {
+        "compute_s": ro["compute_s"],
+        "memory_s": ro["memory_lb_s"],
+        "collective_s": ro["collective_s"],
+    }
+    ro["dominant_conservative"] = max(terms, key=terms.get)
+    return r
+
+
+def fmt_row(r):
+    arch, cell = r["arch"], r["cell"]
+    mesh = "2x16x16" if r.get("multi_pod") else "16x16"
+    if r["status"] == "skipped":
+        return f"| {arch} | {cell} | {mesh} | — | — | — | N/A | skipped: {r['reason'][:70]} |"
+    if r["status"] != "ok":
+        return f"| {arch} | {cell} | {mesh} | — | — | — | ERROR | {r.get('error','')[:80]} |"
+    ro = r["roofline"]
+    dom = ro.get("dominant_conservative", ro["dominant"]).replace("_s", "")
+    useful = r.get("useful_ratio")
+    useful_s = f"{useful:.2f}" if useful else "—"
+    mem_lb = ro.get("memory_lb_s")
+    mem_s = (
+        f"{ro['memory_s']:.3g} / {mem_lb:.3g}" if mem_lb is not None
+        else f"{ro['memory_s']:.3g}"
+    )
+    return (
+        f"| {arch} | {cell} | {mesh} "
+        f"| {ro['compute_s']:.3g} | {mem_s} | {ro['collective_s']:.3g} "
+        f"| {dom} | {useful_s} |"
+    )
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 else "results/roofline_unrolled"
+    rows = [enrich(r) for r in load(d)]
+    print("| arch | cell | mesh | compute (s) | memory UB/LB (s) | collective (s) | bottleneck | useful |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        print(fmt_row(r))
+    ok = sum(1 for r in rows if r["status"] == "ok")
+    sk = sum(1 for r in rows if r["status"] == "skipped")
+    er = len(rows) - ok - sk
+    print(f"\n{ok} ok / {sk} skipped / {er} errors of {len(rows)} records")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Benchmark aggregator — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (the harness contract).  The
+kernel microbenchmark runs at the end; the roofline table is produced
+separately by ``benchmarks.roofline`` from the dry-run artifacts (it needs
+the 512-device XLA flag and its own process).
+"""
+
+from __future__ import annotations
+
+import time
+
+
+def _section(title):
+    print(f"# --- {title} ---", flush=True)
+
+
+def main() -> None:
+    from . import (
+        bench_brute,
+        bench_dataset_size,
+        bench_k,
+        bench_kernel,
+        bench_percentile,
+        bench_rounds,
+        bench_start_radius,
+        bench_work_counts,
+    )
+
+    t0 = time.time()
+    _section("paper Fig3/T1: dataset size sweep")
+    bench_dataset_size.main()
+    _section("paper T2: work counts")
+    bench_work_counts.main()
+    _section("paper Fig4: vs brute force")
+    bench_brute.main()
+    _section("paper Fig5: impact of k")
+    bench_k.main()
+    _section("paper Fig6: round breakdown")
+    bench_rounds.main()
+    _section("paper Fig7: start radius")
+    bench_start_radius.main()
+    _section("paper Fig8/9+T3: 99th percentile / outliers")
+    bench_percentile.main()
+    _section("kernel microbench")
+    bench_kernel.main()
+    print(f"# total {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Quickstart: unbounded kNN on a skewed point cloud in five lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import brute_knn, make_dataset, trueknn
+
+pts = make_dataset("porto", 20_000, seed=0)  # heavy-tailed 2D GPS-like cloud
+res = trueknn(pts, k=5)
+
+print(f"found 5-NN for all {len(pts)} points in {res.n_rounds} rounds")
+print(f"start radius {res.start_radius:.2e} -> final {res.final_radius:.2e}")
+print(f"candidate distance tests: {res.total_tests:,}")
+bd, bi, btests = brute_knn(pts, 5)
+print(f"brute force would test:   {btests:,}  ({btests/res.total_tests:.0f}x more)")
+ok = np.allclose(np.sort(res.dists, 1), np.sort(np.asarray(bd), 1), rtol=1e-4, atol=1e-7)
+print(f"exact vs brute force: {ok}")

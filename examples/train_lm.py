@@ -1,0 +1,16 @@
+"""End-to-end training driver: train a small LM (any of the 10 assigned
+architectures, reduced preset) for a few hundred steps with checkpointing.
+
+    PYTHONPATH=src python examples/train_lm.py --arch qwen3-0.6b --steps 200
+
+Equivalent to:  python -m repro.launch.train --preset small ...
+"""
+
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    if "--steps" not in " ".join(sys.argv):
+        sys.argv += ["--steps", "200"]
+    main()

@@ -1,0 +1,28 @@
+"""TrueKNN core: unbounded RT-style neighbor search, adapted to TPU."""
+
+from .brute import brute_knn
+from .datasets import DATASETS, make_dataset
+from .fixed_radius import fixed_radius_knn, fixed_radius_round
+from .grid import Grid, build_grid
+from .sampling import (
+    max_knn_distance,
+    percentile_knn_distance,
+    sample_start_radius,
+)
+from .trueknn import RoundStats, TrueKNNResult, trueknn
+
+__all__ = [
+    "brute_knn",
+    "DATASETS",
+    "make_dataset",
+    "fixed_radius_knn",
+    "fixed_radius_round",
+    "Grid",
+    "build_grid",
+    "max_knn_distance",
+    "percentile_knn_distance",
+    "sample_start_radius",
+    "RoundStats",
+    "TrueKNNResult",
+    "trueknn",
+]

@@ -1,0 +1,82 @@
+"""Exact brute-force kNN oracle (the role cuML's kNN plays in the paper).
+
+Chunked over queries so the (Q, N) distance matrix never materializes whole.
+Used (a) as the correctness oracle for every other search path, (b) as the
+non-accelerated comparison point (paper Fig. 4), and (c) as the exact
+subroutine inside start-radius sampling (paper Alg. 2 uses sklearn).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["brute_knn"]
+
+
+@partial(jax.jit, static_argnames=("k", "chunk", "exclude_self"))
+def _brute_impl(points, queries, query_ids, *, k, chunk, exclude_self):
+    n = points.shape[0]
+    d = points.shape[1]
+    q_total = queries.shape[0]
+    assert q_total % chunk == 0
+    p_norm2 = jnp.sum(points * points, axis=-1)  # (N,)
+
+    def one_chunk(_, inp):
+        q, qid = inp
+        if d <= 8:
+            # exact diff-based form: the matmul identity loses ~1e-7 absolute
+            # to cancellation, which is catastrophic for the tiny squared
+            # distances of tightly-clustered data (and d<=8 never profits
+            # from the MXU anyway)
+            diff = q[:, None, :] - points[None, :, :]
+            d2 = jnp.sum(diff * diff, axis=-1)
+        else:
+            q_norm2 = jnp.sum(q * q, axis=-1)
+            d2 = q_norm2[:, None] + p_norm2[None, :] - 2.0 * (q @ points.T)
+            d2 = jnp.maximum(d2, 0.0)
+        if exclude_self:
+            d2 = jnp.where(jnp.arange(n)[None, :] == qid[:, None], jnp.inf, d2)
+        neg, idx = jax.lax.top_k(-d2, k)
+        return None, (-neg, idx)
+
+    qs = queries.reshape(-1, chunk, d)
+    qids = query_ids.reshape(-1, chunk)
+    _, (td, ti) = jax.lax.scan(one_chunk, None, (qs, qids))
+    return td.reshape(q_total, k), ti.reshape(q_total, k)
+
+
+def brute_knn(points, k, *, queries=None, chunk: int = 512):
+    """Exact kNN.  Returns (dists (Q,k), idxs (Q,k), n_tests).
+
+    When ``queries`` is None the dataset queries itself and self-matches are
+    excluded (the paper's setting).
+    """
+    pts = jnp.asarray(points, jnp.float32)
+    n = pts.shape[0]
+    if queries is None:
+        q = pts
+        qid = jnp.arange(n, dtype=jnp.int32)
+        exclude_self = True
+    else:
+        q = jnp.asarray(queries, jnp.float32)
+        qid = jnp.full((q.shape[0],), n, jnp.int32)
+        exclude_self = False
+    q_total = q.shape[0]
+    chunk = int(min(chunk, max(1, q_total)))
+    pad = (-q_total) % chunk
+    if pad:
+        q = jnp.concatenate([q, jnp.zeros((pad, q.shape[1]), q.dtype)])
+        qid = jnp.concatenate([qid, jnp.full((pad,), n, qid.dtype)])
+    k_eff = min(int(k), n - 1 if exclude_self else n)
+    d2, idx = _brute_impl(
+        pts, q, qid, k=k_eff, chunk=chunk, exclude_self=exclude_self
+    )
+    d2, idx = d2[:q_total], idx[:q_total]
+    if k_eff < k:
+        d2 = jnp.pad(d2, ((0, 0), (0, k - k_eff)), constant_values=jnp.inf)
+        idx = jnp.pad(idx, ((0, 0), (0, k - k_eff)), constant_values=n)
+    n_tests = q_total * n
+    return jnp.sqrt(d2), idx, n_tests

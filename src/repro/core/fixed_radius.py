@@ -1,0 +1,170 @@
+"""Fixed-radius kNN on the cell grid — the analogue of paper Alg. 1 (RT-kNNS).
+
+For every query: locate its grid cell, gather the 3^d one-ring stencil's
+bucket contents (static-shape candidate list), compute squared distances in
+dense tiles, mask (sentinel / out-of-radius / self), and keep the k smallest.
+
+Returns, per query, the k best (distance, index) pairs found *within the
+radius*, the count of in-radius neighbors, and the number of candidate
+distance evaluations performed — the TPU equivalent of the paper's
+"ray-sphere intersection tests" (their Table 2 metric).
+
+Grid resolution is dynamic (a traced array); only bucket capacity, k and the
+query-chunk size are static, and all are padded to powers of two upstream, so
+TrueKNN's radius-doubling rounds recompile O(log N) times, not O(rounds).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .grid import Grid, stencil_offsets
+
+__all__ = ["fixed_radius_knn", "fixed_radius_round"]
+
+
+def _pad_points(points: jax.Array) -> jax.Array:
+    """Append a sentinel +inf row so bucket-pad gathers resolve harmlessly."""
+    sentinel = jnp.full((1, points.shape[1]), jnp.inf, points.dtype)
+    return jnp.concatenate([points, sentinel], axis=0)
+
+
+@partial(jax.jit, static_argnames=("table_size", "k", "chunk"))
+def _round_impl(
+    points_padded,  # (N+1, d) with +inf sentinel row
+    buckets,  # (H, cap)
+    point_cells,  # (N+1, d) int32 cell coords, sentinel row -2
+    origin,
+    inv_cell,
+    res_arr,  # (d,) int32, dynamic virtual resolution
+    queries,  # (Q, d), padded queries have +inf coords
+    query_ids,  # (Q,) int32 index of query in `points`, or N for "no self"
+    r2,  # scalar squared radius
+    *,
+    table_size: int,
+    k: int,
+    chunk: int,
+):
+    from .grid import cell_coords_of, hash_coords
+
+    n = points_padded.shape[0] - 1
+    d = points_padded.shape[1]
+    cap = buckets.shape[1]
+    offs = jnp.asarray(stencil_offsets(d))  # (S, d)
+    s = offs.shape[0]
+
+    q_total = queries.shape[0]
+    assert q_total % chunk == 0
+    n_cand = s * cap
+
+    def one_chunk(carry, inp):
+        q, qid = inp  # (chunk, d), (chunk,)
+        qfin = jnp.where(jnp.isfinite(q), q, 0.0)  # keep pad-query math finite
+        coords = cell_coords_of(qfin, origin, inv_cell, res_arr)
+        nbr = coords[:, None, :] + offs[None, :, :]  # (chunk, S, d)
+        in_range = jnp.all((nbr >= 0) & (nbr < res_arr), axis=-1)  # (chunk, S)
+        h = hash_coords(nbr, table_size)  # (chunk, S)
+        # candidate point indices, (chunk, S*cap); out-of-range cells -> N
+        cand = jnp.where(in_range[..., None], buckets[h], n)
+        # exact cell-coord match kills hash collisions (and duplicates): the
+        # integer compare is our ray-AABB test analogue.
+        ccell = point_cells[cand]  # (chunk, S, cap, d)
+        match = jnp.all(ccell == nbr[:, :, None, :], axis=-1)
+        cand = jnp.where(match, cand, n).reshape(chunk, n_cand)
+        cpts = points_padded[cand]  # (chunk, n_cand, d)
+        diff = cpts - q[:, None, :]
+        d2 = jnp.sum(diff * diff, axis=-1)
+        d2 = jnp.nan_to_num(d2, nan=jnp.inf, posinf=jnp.inf)
+        valid = (cand < n) & jnp.isfinite(q[:, :1])  # pad queries don't count
+        not_self = cand != qid[:, None]
+        tests = jnp.sum(valid, dtype=jnp.float32)  # distance evals this chunk
+        within = valid & not_self & (d2 <= r2)
+        found = jnp.sum(within, axis=-1)  # (chunk,)
+        d2m = jnp.where(within, d2, jnp.inf)
+        kk = min(k, n_cand)
+        neg_top, arg = jax.lax.top_k(-d2m, kk)
+        top_d = -neg_top
+        top_i = jnp.take_along_axis(cand, arg, axis=-1)
+        top_i = jnp.where(jnp.isfinite(top_d), top_i, n)
+        if kk < k:
+            top_d = jnp.pad(top_d, ((0, 0), (0, k - kk)), constant_values=jnp.inf)
+            top_i = jnp.pad(top_i, ((0, 0), (0, k - kk)), constant_values=n)
+        return carry, (top_d, top_i, found, tests)
+
+    qs = queries.reshape(-1, chunk, d)
+    qids = query_ids.reshape(-1, chunk)
+    _, (td, ti, fc, tests) = jax.lax.scan(one_chunk, None, (qs, qids))
+    return (
+        td.reshape(q_total, k),
+        ti.reshape(q_total, k),
+        fc.reshape(q_total),
+        tests,
+    )
+
+
+def fixed_radius_round(
+    points,
+    grid: Grid,
+    queries,
+    query_ids,
+    radius: float,
+    k: int,
+    *,
+    chunk: int = 2048,
+):
+    """One fixed-radius search round (host wrapper; shapes made chunk-aligned).
+
+    Returns (dists2 (Q,k), idxs (Q,k), found (Q,), n_tests scalar).
+    Entries beyond the in-radius neighbor set have dist=inf, idx=N.
+    """
+    q = jnp.asarray(queries, jnp.float32)
+    qid = jnp.asarray(query_ids, jnp.int32)
+    q_total = q.shape[0]
+    chunk = int(min(chunk, max(1, q_total)))
+    pad = (-q_total) % chunk
+    if pad:
+        q = jnp.concatenate([q, jnp.full((pad, q.shape[1]), jnp.inf, q.dtype)])
+        qid = jnp.concatenate([qid, jnp.full((pad,), grid.n_points, qid.dtype)])
+    pts = _pad_points(jnp.asarray(points, jnp.float32))
+    d2, idx, found, tests = _round_impl(
+        pts,
+        grid.buckets,
+        grid.point_cells,
+        grid.origin,
+        grid.inv_cell,
+        grid.res_arr,
+        q,
+        qid,
+        jnp.float32(radius) ** 2,
+        table_size=grid.table_size,
+        k=int(k),
+        chunk=chunk,
+    )
+    n_tests = int(np.asarray(tests, dtype=np.float64).sum())
+    return d2[:q_total], idx[:q_total], found[:q_total], n_tests
+
+
+def fixed_radius_knn(points, radius, k, *, queries=None, chunk: int = 2048):
+    """Paper Alg. 1 analogue: fixed-radius kNN for all queries (self-excluded
+    when queries are the dataset itself).  Builds its own grid.
+
+    Returns (dists (Q,k), idxs (Q,k), found (Q,), n_tests).
+    """
+    from .grid import build_grid
+
+    pts = jnp.asarray(points, jnp.float32)
+    if queries is None:
+        q = pts
+        qid = jnp.arange(pts.shape[0], dtype=jnp.int32)
+    else:
+        q = jnp.asarray(queries, jnp.float32)
+        qid = jnp.full((q.shape[0],), pts.shape[0], jnp.int32)
+    grid = build_grid(pts, radius)
+    d2, idx, found, tests = fixed_radius_round(
+        pts, grid, q, qid, radius, k, chunk=chunk
+    )
+    return jnp.sqrt(d2), idx, found, tests

@@ -1,0 +1,207 @@
+"""Spatial hash grid — the TPU-native analogue of the paper's BVH.
+
+The paper prunes ray-sphere intersection tests with a hardware-traversed BVH
+over radius-r spheres.  On TPU, pointer-chasing tree traversal is hostile to
+the hardware; the idiomatic equivalent for *fixed-radius* search is a uniform
+cell decomposition with cell side >= r: every point within radius r of a query
+lies in the 3^d-cell one-ring stencil around the query's cell.
+
+A *dense* cell array collapses on real point clouds (LiDAR: a dense core plus
+far outliers stretches the bounding box so a radius-matched dense grid needs
+billions of cells).  We therefore use a **spatial hash grid** (Teschner-style):
+virtual resolution is radius-matched and unbounded, occupied cells hash into a
+table of O(#occupied) buckets, and exactness is preserved by storing each
+point's integer cell coords and filtering gathered candidates on an exact
+coord match (the integer-compare plays the role of the hardware ray-AABB
+test; hash collisions are filtered, never double-counted).
+
+Binning is a counting sort (O(N)), which plays the role of the paper's BVH
+*refit* when the radius grows.  Buckets are fixed-capacity ``(H, cap)`` with
+pow2-padded dims so TrueKNN's radius-doubling rounds recompile O(log N)
+times, not O(rounds).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Grid", "build_grid", "stencil_offsets", "hash_coords"]
+
+# Teschner et al. spatial-hash primes (one per axis).
+_HASH_PRIMES = (73856093, 19349663, 83492791)
+_MAX_RES_PER_AXIS = 1 << 20  # keeps packed host-side ids within int64
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(0, (int(x) - 1).bit_length())
+
+
+@dataclasses.dataclass(frozen=True)
+class Grid:
+    """Static-shape spatial hash grid over a point set.
+
+    Attributes:
+      buckets:     (H, cap) int32 point indices, padded with N (sentinel).
+      point_cells: (N+1, d) int32 cell coords per point; sentinel row = -2.
+      origin:      (d,) float32 lower corner of the bounding box.
+      inv_cell:    (d,) float32 reciprocal effective cell size per axis.
+      res:         (d,) host ints — virtual cells per axis (bounds check only).
+      res_arr:     (d,) int32 device copy (dynamic under jit).
+      table_size:  int, H (static, pow2).
+      cap:         int, bucket capacity (static, pow2).
+      n_points:    int.
+      cell_size:   (d,) np.float32 effective cell size (>= build radius).
+    """
+
+    buckets: jax.Array
+    point_cells: jax.Array
+    origin: jax.Array
+    inv_cell: jax.Array
+    res: tuple
+    res_arr: jax.Array
+    table_size: int
+    cap: int
+    n_points: int
+    cell_size: np.ndarray
+
+
+def stencil_offsets(d: int) -> np.ndarray:
+    """(3^d, d) integer offsets of the one-ring stencil."""
+    grids = np.meshgrid(*([np.arange(-1, 2)] * d), indexing="ij")
+    return np.stack([g.ravel() for g in grids], axis=-1).astype(np.int32)
+
+
+def hash_coords(coords, table_size: int):
+    """Spatial hash of integer cell coords -> bucket id in [0, table_size).
+
+    Works identically for jnp int32 arrays and np int64/int32 arrays (uint32
+    wraparound arithmetic in both).
+    """
+    if isinstance(coords, jnp.ndarray):
+        u = coords.astype(jnp.uint32)
+        h = u[..., 0] * jnp.uint32(_HASH_PRIMES[0])
+        for a in range(1, coords.shape[-1]):
+            h = h ^ (u[..., a] * jnp.uint32(_HASH_PRIMES[a]))
+        return (h & jnp.uint32(table_size - 1)).astype(jnp.int32)
+    u = coords.astype(np.uint32)
+    h = u[..., 0] * np.uint32(_HASH_PRIMES[0])
+    for a in range(1, coords.shape[-1]):
+        h = h ^ (u[..., a] * np.uint32(_HASH_PRIMES[a]))
+    return (h & np.uint32(table_size - 1)).astype(np.int64)
+
+
+def cell_coords_of(points, origin, inv_cell, res_arr):
+    """Per-axis integer cell coords, clamped to the virtual grid."""
+    c = jnp.floor((points - origin) * inv_cell).astype(jnp.int32)
+    return jnp.clip(c, 0, res_arr - 1)
+
+
+@partial(jax.jit, static_argnames=("table_size", "cap", "n_valid"))
+def _bin_points(points, origin, inv_cell, res_arr, *, table_size, cap, n_valid):
+    """Counting-sort points into hash buckets (jit, static shapes).
+
+    Rows >= n_valid are padding (sharded grids pad shards to equal length):
+    they are never binned and their cell coords are -2 (match nothing).
+    """
+    n = points.shape[0]
+    valid = jnp.arange(n) < n_valid
+    coords = cell_coords_of(
+        jnp.where(jnp.isfinite(points), points, 0.0), origin, inv_cell, res_arr
+    )
+    h = jnp.where(valid, hash_coords(coords, table_size), table_size - 1)
+    order = jnp.argsort(h)  # stable
+    sorted_h = h[order]
+    counts = jnp.bincount(jnp.where(valid, h, table_size), length=table_size)
+    starts = jnp.cumsum(counts) - counts
+    slot = jnp.arange(n) - starts[sorted_h]  # rank within own bucket
+    keep = (slot < cap) & (order < n_valid)
+    buckets = jnp.full((table_size, cap), n, dtype=jnp.int32)
+    buckets = buckets.at[
+        jnp.where(keep, sorted_h, table_size),  # OOB row -> dropped
+        jnp.clip(slot, 0, cap - 1),
+    ].set(order.astype(jnp.int32), mode="drop")
+    coords = jnp.where(valid[:, None], coords, -2)
+    sentinel = jnp.full((1, points.shape[1]), -2, jnp.int32)
+    point_cells = jnp.concatenate([coords, sentinel], axis=0)
+    return buckets, point_cells
+
+
+def build_grid(
+    points,
+    radius: float,
+    *,
+    max_bucket_elems: int = 1 << 25,
+    load_factor: float = 0.5,
+    force_table_size: int = 0,
+    force_cap: int = 0,
+    n_valid: int = 0,
+) -> Grid:
+    """Build a hash grid whose effective cell size is >= ``radius`` per axis.
+
+    Host-orchestrated (table size / capacity become concrete) — the analogue
+    of the paper's host-side BVH refit between rounds.  ``n_valid``: rows
+    beyond it are padding (sharded stacking), excluded from the index.
+    """
+    pts_all = np.asarray(points, dtype=np.float32)
+    n, d = pts_all.shape
+    n_valid = n_valid or n
+    pts = pts_all[:n_valid]
+    lo = pts.min(axis=0)
+    hi = pts.max(axis=0)
+    extent = np.maximum(hi - lo, 1e-12)
+
+    radius = float(max(radius, 1e-12))
+    res = np.clip(
+        np.floor(extent / radius).astype(np.int64), 1, _MAX_RES_PER_AXIS
+    )
+
+    while True:
+        cell = (extent / res).astype(np.float32)
+        coords = np.clip(np.floor((pts - lo) / cell).astype(np.int64), 0, res - 1)
+        # pack to a unique id per occupied cell (host side, exact)
+        packed = coords[:, 0]
+        for a in range(1, d):
+            packed = packed * res[a] + coords[:, a]
+        n_occ = len(np.unique(packed))
+        table_size = force_table_size or _next_pow2(
+            max(int(n_occ / load_factor), 16)
+        )
+        h = hash_coords(coords.astype(np.int64), table_size)
+        occ = np.bincount(h, minlength=table_size)
+        needed_cap = _next_pow2(max(int(occ.max()), 1))
+        if force_cap:
+            # caller pre-computed a shared shape (sharded-grid stacking);
+            # it must be adequate — exactness over silent truncation.
+            assert needed_cap <= force_cap, (needed_cap, force_cap)
+            cap = force_cap
+            break
+        cap = needed_cap
+        if table_size * cap <= max_bucket_elems or int(res.max()) == 1:
+            break
+        res = np.maximum(res // 2, 1)  # coarsen (cells grow — always safe)
+
+    res_t = tuple(int(r) for r in res)
+    origin = jnp.asarray(lo)
+    inv_cell = jnp.asarray(1.0 / cell)
+    res_arr = jnp.asarray(res_t, jnp.int32)
+    buckets, point_cells = _bin_points(
+        jnp.asarray(pts_all), origin, inv_cell, res_arr,
+        table_size=table_size, cap=cap, n_valid=n_valid,
+    )
+    return Grid(
+        buckets=buckets,
+        point_cells=point_cells,
+        origin=origin,
+        inv_cell=inv_cell,
+        res=res_t,
+        res_arr=res_arr,
+        table_size=table_size,
+        cap=cap,
+        n_points=n,
+        cell_size=cell,
+    )

@@ -1,0 +1,86 @@
+"""kNN-LM over TrueKNN: the paper's technique as the retrieval engine of an
+LM serving stack.
+
+The paper's hardware reduction is 3D-only; its own prescription for higher-d
+data (Sec. 6.2) is dimensionality reduction (PCA et al.).  We implement
+exactly that bridge: LM hidden states are PCA-projected to 3 components, the
+datastore is indexed by the hash grid, and at decode time the next-token
+distribution interpolates between the LM softmax and the kNN distribution
+over retrieved targets (Khandelwal et al., 2020 style):
+
+    p(y) = (1-lam) * p_LM(y) + lam * sum_{(h_i,y_i) in kNN(h)} softmax(-d_i/T)
+
+PCA-to-3D costs retrieval fidelity (documented trade-off — the honest port of
+the paper's own restriction); the Pallas engine itself is d-generic, so the
+no-PCA variant is the natural beyond-paper extension.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .trueknn import trueknn
+
+
+@dataclasses.dataclass
+class PCAProjector:
+    mean: np.ndarray  # (D,)
+    components: np.ndarray  # (D, 3)
+
+    def __call__(self, h: np.ndarray) -> np.ndarray:
+        return ((h - self.mean) @ self.components).astype(np.float32)
+
+
+def fit_pca(hiddens: np.ndarray, dim: int = 3) -> PCAProjector:
+    mean = hiddens.mean(0)
+    x = hiddens - mean
+    # economy SVD on a sample for big stores
+    if x.shape[0] > 20_000:
+        idx = np.random.default_rng(0).choice(x.shape[0], 20_000, replace=False)
+        x = x[idx]
+    _, _, vt = np.linalg.svd(x, full_matrices=False)
+    return PCAProjector(mean=mean.astype(np.float32),
+                        components=vt[:dim].T.astype(np.float32))
+
+
+@dataclasses.dataclass
+class Datastore:
+    keys3d: np.ndarray  # (N, 3) PCA-projected hidden states
+    targets: np.ndarray  # (N,) next-token ids
+    projector: PCAProjector
+
+
+def build_datastore(hiddens: np.ndarray, targets: np.ndarray) -> Datastore:
+    """hiddens (N, D) f32 from a trained LM's final layer; targets (N,)."""
+    proj = fit_pca(hiddens)
+    return Datastore(
+        keys3d=proj(hiddens), targets=np.asarray(targets, np.int32),
+        projector=proj,
+    )
+
+
+def knn_logprobs(
+    store: Datastore,
+    query_hiddens: np.ndarray,
+    vocab_size: int,
+    *,
+    k: int = 8,
+    temperature: float = 1.0,
+):
+    """(Q, vocab) kNN distribution from TrueKNN retrieval over the store."""
+    q3 = store.projector(query_hiddens)
+    res = trueknn(store.keys3d, k, queries=q3)
+    d = res.dists  # (Q, k)
+    w = np.exp(-d / max(temperature, 1e-6))
+    w = w / np.clip(w.sum(1, keepdims=True), 1e-12, None)
+    out = np.zeros((q3.shape[0], vocab_size), np.float32)
+    tgt = store.targets[np.clip(res.idxs, 0, len(store.targets) - 1)]
+    for i in range(q3.shape[0]):
+        np.add.at(out[i], tgt[i], w[i])
+    return out
+
+
+def interpolate(p_lm: np.ndarray, p_knn: np.ndarray, lam: float = 0.25):
+    return (1 - lam) * p_lm + lam * p_knn

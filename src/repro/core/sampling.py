@@ -1,0 +1,53 @@
+"""Start-radius estimation — paper Algorithm 2 (RandomSample), exactly.
+
+Sample ``sample_size`` points, find their ``sample_k`` nearest neighbors with
+an exact search (the paper uses sklearn's ball tree; we use our brute oracle),
+and return the *minimum* observed neighbor distance as the start radius.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .brute import brute_knn
+
+__all__ = ["sample_start_radius", "max_knn_distance", "percentile_knn_distance"]
+
+
+def sample_start_radius(
+    points, *, sample_size: int = 100, sample_k: int = 4, seed: int = 0
+) -> float:
+    """Paper Alg. 2: min distance among the 4-NN of 100 random points."""
+    pts = np.asarray(points, dtype=np.float32)
+    n = pts.shape[0]
+    rng = np.random.default_rng(seed)
+    m = min(sample_size, n)
+    sel = rng.choice(n, size=m, replace=False)
+    # Exact kNN of the sampled queries against the full dataset; queries are
+    # dataset members, so drop the zero-distance self match via k+1.
+    kq = min(sample_k + 1, n)
+    dists, _, _ = brute_knn(pts, kq, queries=pts[sel])
+    d = np.asarray(dists)[:, 1:]  # drop self column
+    d = d[np.isfinite(d) & (d > 0)]
+    if d.size == 0:
+        return 1e-6
+    return float(d.min())
+
+
+def max_knn_distance(points, k: int, *, chunk: int = 1024) -> float:
+    """maxDist: max over points of the distance to their k-th neighbor.
+
+    This is the paper's *oracle* baseline radius (Sec. 5.2.1) — the smallest
+    fixed radius guaranteed to resolve every query.
+    """
+    dists, _, _ = brute_knn(points, k, chunk=chunk)
+    d = np.asarray(dists)
+    return float(np.max(d[:, k - 1]))
+
+
+def percentile_knn_distance(points, k: int, pct: float = 99.0) -> float:
+    """The paper's 99th-percentile thought-experiment radius (Sec. 5.5.1)."""
+    dists, _, _ = brute_knn(points, k)
+    d = np.asarray(dists)[:, k - 1]
+    return float(np.percentile(d, pct))

@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, SyntheticLMStream
+
+__all__ = ["DataConfig", "SyntheticLMStream"]

@@ -1,0 +1,84 @@
+"""User-facing jit'd wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute with ``interpret=True`` —
+Pallas's Python interpreter — which validates the kernel body bit-for-bit
+against the BlockSpec pipeline it would run on TPU.  On TPU backends the same
+call compiles to Mosaic.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .pairwise_topk import DEFAULT_TP, DEFAULT_TQ, pairwise_topk_padded
+
+__all__ = ["pairwise_topk"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def pairwise_topk(
+    queries,
+    points,
+    k: int,
+    *,
+    radius: float = np.inf,
+    query_ids=None,
+    tq: int | None = None,
+    tp: int | None = None,
+    interpret: bool | None = None,
+):
+    """Exact k smallest squared distances from each query to the point set,
+    plus the count of points within ``radius`` — fused, streaming, O(Q·k)
+    output memory.  The engine of the brute / distributed search paths.
+
+    Returns (d2 (Q, k) f32, idx (Q, k) i32, counts (Q,) i32).  ``idx`` is N
+    for slots beyond the point count.  ``query_ids`` (Q,) optionally excludes
+    one self index per query.
+    """
+    q = jnp.asarray(queries, jnp.float32)
+    p = jnp.asarray(points, jnp.float32)
+    n_q, d = q.shape
+    n_real = p.shape[0]
+    assert p.shape[1] == d
+    if interpret is None:
+        interpret = not _on_tpu()
+
+    tq = tq or min(DEFAULT_TQ, _round_up(n_q, 8))
+    tp = tp or min(DEFAULT_TP, _round_up(n_real, 128))
+    dp = _round_up(max(d, 1), 128 if _on_tpu() else 8)  # lane-align features
+
+    qp = _round_up(n_q, tq)
+    np_pad = _round_up(n_real, tp)
+    q_pad = jnp.zeros((qp, dp), jnp.float32).at[:n_q, :d].set(q)
+    p_pad = jnp.zeros((np_pad, dp), jnp.float32).at[:n_real, :d].set(p)
+    if query_ids is None:
+        qid = jnp.full((qp, 1), n_real, jnp.int32)
+    else:
+        qid = jnp.full((qp, 1), n_real, jnp.int32).at[:n_q, 0].set(
+            jnp.asarray(query_ids, jnp.int32)
+        )
+    r2 = jnp.asarray(
+        [[np.float32(radius) ** 2 if np.isfinite(radius) else np.inf]],
+        jnp.float32,
+    )
+    d2, idx, counts = pairwise_topk_padded(
+        q_pad,
+        qid,
+        p_pad,
+        r2,
+        k=int(k),
+        n_real=int(n_real),
+        tq=tq,
+        tp=tp,
+        interpret=bool(interpret),
+    )
+    return d2[:n_q], idx[:n_q], counts[:n_q, 0]

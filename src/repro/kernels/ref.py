@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_topk_ref(queries, points, k, *, radius2=jnp.inf, query_ids=None):
+    """Oracle for kernels.pairwise_topk: exact top-k + in-radius counts.
+
+    queries (Q, D) f32, points (N, D) f32.  ``query_ids`` (Q,) marks, per
+    query, the point index to exclude (self); pass None for no exclusion.
+    Returns (d2 (Q,k), idx (Q,k), counts (Q,)).
+    """
+    q = jnp.asarray(queries, jnp.float32)
+    p = jnp.asarray(points, jnp.float32)
+    n = p.shape[0]
+    diff = q[:, None, :] - p[None, :, :]
+    d2 = jnp.sum(diff * diff, axis=-1)
+    if query_ids is not None:
+        mask = jnp.arange(n)[None, :] == jnp.asarray(query_ids)[:, None]
+        d2 = jnp.where(mask, jnp.inf, d2)
+    counts = jnp.sum(d2 <= radius2, axis=1, dtype=jnp.int32)
+    kk = min(k, n)
+    neg, idx = jax.lax.top_k(-d2, kk)
+    topd = -neg
+    idx = jnp.where(jnp.isfinite(topd), idx, n)
+    if kk < k:
+        topd = jnp.pad(topd, ((0, 0), (0, k - kk)), constant_values=jnp.inf)
+        idx = jnp.pad(idx, ((0, 0), (0, k - kk)), constant_values=n)
+    return topd, idx, counts

@@ -1,0 +1,198 @@
+"""Roofline-term extraction from lowered/compiled artifacts.
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16 per chip, 819 GB/s HBM per chip,
+~50 GB/s/link ICI.
+
+``cost_analysis`` supplies HLO flops/bytes; collective bytes are NOT in
+cost_analysis, so we parse the (post-SPMD, per-device) HLO text and sum the
+result-shape bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute.  Result-shape bytes are the standard ring
+proxy for bytes-through-a-link (exact for all-reduce at 2(n-1)/n ~ 2x, an
+upper bound for all-gather); we report raw sums and keep the convention
+consistent across baselines and hillclimb deltas, which is what the
+iteration log needs.
+"""
+
+from __future__ import annotations
+
+import re
+
+import numpy as np
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g.:  %all-gather.3 = bf16[16,2048]{1,0} all-gather(
+_OP_RE = re.compile(
+    r"=\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?\s(" + "|".join(_COLLECTIVES) + r")\("
+)
+# tuple-result collectives:  = (f32[8,4]{...}, f32[8,4]{...}) all-reduce(
+_TUPLE_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s*(" + "|".join(_COLLECTIVES) + r")\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective-kind result bytes summed over the module."""
+    out = {c: 0 for c in _COLLECTIVES}
+    count = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if not any(c in line for c in _COLLECTIVES):
+            continue
+        m = _TUPLE_RE.search(line)  # tuple results first (subset ambiguity)
+        if m:
+            shapes, op = m.groups()
+            for dtype, dims in _SHAPE_RE.findall(shapes):
+                out[op] += _shape_bytes(dtype, dims)
+            count[op] += 1
+            continue
+        m = _OP_RE.search(line)
+        if m:
+            dtype, dims, op = m.groups()
+            out[op] += _shape_bytes(dtype, dims)
+            count[op] += 1
+    return {"bytes": out, "counts": count, "total_bytes": sum(out.values())}
+
+
+def roofline(cost: dict, coll_total_bytes: int, n_chips: int, *, per_device_hlo: bool = True) -> dict:
+    """Three roofline terms in seconds.
+
+    ``per_device_hlo``: cost_analysis of a post-SPMD module reports the
+    per-device program, so flops/bytes are already per-chip; the chips term
+    then divides only the collective bytes (each chip drives its own links).
+    """
+    flops = float(cost.get("flops", 0.0) or 0.0)
+    bytes_ = float(
+        cost.get("bytes accessed", cost.get("bytes accessed0{}", 0.0)) or 0.0
+    )
+    if per_device_hlo:
+        compute_s = flops / PEAK_FLOPS
+        memory_s = bytes_ / HBM_BW
+        collective_s = coll_total_bytes / ICI_BW
+        global_flops = flops * n_chips
+    else:
+        compute_s = flops / (n_chips * PEAK_FLOPS)
+        memory_s = bytes_ / (n_chips * HBM_BW)
+        collective_s = coll_total_bytes / (n_chips * ICI_BW)
+        global_flops = flops
+    terms = {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+    }
+    dom = max(terms, key=terms.get)
+    return {
+        **terms,
+        "dominant": dom,
+        "hlo_flops_per_device": flops if per_device_hlo else flops / n_chips,
+        "hlo_flops_global": global_flops,
+        "hlo_bytes_per_device": bytes_ if per_device_hlo else bytes_ / n_chips,
+        "collective_bytes": coll_total_bytes,
+        "n_chips": n_chips,
+    }
+
+
+def model_memory_bytes(cfg, cell, n_chips: int) -> float:
+    """Analytic per-chip HBM-traffic LOWER BOUND for one step of this cell.
+
+    XLA-CPU ``bytes accessed`` is an upper bound (the CPU pipeline doesn't
+    fuse like Mosaic/TPU), so the table reports both.  The LB counts the
+    irreducible streams:
+      train:   params read (fwd+bwd) + grads written + Adam moments rw
+               + activations written-then-read once (no remat assumed)
+      prefill: params read + KV cache written + activations once
+      decode:  params read + KV cache read/updated (the decode wall)
+    """
+    pbytes = 2.0  # bf16 params
+    n_local = active_params(cfg) / n_chips  # active: routed experts stream once
+    d = cfg.d_model
+    if cell.kind == "train":
+        tokens_local = cell.global_batch * cell.seq_len / n_chips
+        act = tokens_local * d * cfg.n_layers * 2 * 2.0  # write+read, bf16
+        return n_local * (2 * pbytes + 2 + 8 + 8) + act  # p,p | g | mu,nu
+    if cell.kind == "prefill":
+        tokens_local = cell.global_batch * cell.seq_len / n_chips
+        act = tokens_local * d * cfg.n_layers * 2.0
+        kv = _kv_bytes(cfg, cell, n_chips)
+        return n_local * pbytes + act + kv
+    # decode: stream params + whole KV cache once per token
+    return n_local * pbytes + _kv_bytes(cfg, cell, n_chips)
+
+
+def _kv_bytes(cfg, cell, n_chips: int) -> float:
+    b, s = cell.global_batch, cell.seq_len
+    if cfg.attn_type == "mla":
+        per_tok = cfg.kv_lora_rank + cfg.qk_rope_dim
+        n_full = cfg.n_layers
+    elif cfg.attn_type == "none":
+        # SSM state, seq-independent
+        d_inner = cfg.ssm_expand * cfg.d_model
+        return cfg.n_layers * b * (d_inner / cfg.ssm_head_dim) \
+            * cfg.ssm_head_dim * cfg.ssm_state * 4 / n_chips
+    else:
+        kinds = cfg.layer_kinds
+        n_full = sum(1 for k in kinds if k == "attn")
+        n_local_attn = sum(1 for k in kinds if k == "local")
+        n_rglru = sum(1 for k in kinds if k == "rglru")
+        per_tok = 2 * cfg.n_kv_heads * cfg.head_dim
+        full = n_full * b * s * per_tok * 2.0
+        loc = n_local_attn * b * min(s, cfg.local_window) * per_tok * 2.0
+        rg = n_rglru * b * cfg.rglru_expand * cfg.d_model * 4.0
+        return (full + loc + rg) / n_chips
+    return n_full * b * s * per_tok * 2.0 / n_chips
+
+
+def model_flops(cfg, cell) -> float:
+    """MODEL_FLOPS = 6*N*D tokens (dense) / 6*N_active*D (MoE); decode cells
+    use D = batch tokens (one step)."""
+    n_params = cfg.param_count()
+    n_active = active_params(cfg)
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n_active * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * cell.global_batch
+
+
+def active_params(cfg) -> int:
+    """Active-per-token params (MoE discounts unrouted experts)."""
+    total = cfg.param_count()
+    if not cfg.n_experts:
+        return total
+    import numpy as _np
+
+    d, de = cfg.d_model, (cfg.d_expert or cfg.d_ff)
+    per_expert = 3 * d * de
+    n_moe_layers = sum(
+        1 for i in range(cfg.n_layers) if i >= cfg.first_k_dense
+    )
+    routed_total = cfg.n_experts * per_expert * n_moe_layers
+    routed_active = cfg.experts_per_token * per_expert * n_moe_layers
+    return int(total - routed_total + routed_active)

@@ -1,0 +1,101 @@
+"""Assigned input-shape cells and ShapeDtypeStruct stand-ins for the dry-run.
+
+Cells (per the assignment):
+  train_4k     seq 4096   global_batch 256   -> train_step
+  prefill_32k  seq 32768  global_batch 32    -> prefill_step
+  decode_32k   seq 32768  global_batch 128   -> serve (decode) step
+  long_500k    seq 524288 global_batch 1     -> serve (decode) step,
+               sub-quadratic archs only (SSM / hybrid / local:global)
+
+``input_specs`` returns pure ShapeDtypeStructs — weak-type-correct, shardable,
+zero allocation.  [audio]/[vlm] archs get a stubbed modality prefix
+(precomputed frame/patch embeddings) carved out of the sequence budget.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import make_decode_caches
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+CELLS = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+# long_500k needs sub-quadratic attention state.  Run for SSM/hybrid (O(1) or
+# windowed state); skip for archs where every layer holds a full-seq KV cache.
+LONG_OK = {"mamba2-1.3b", "recurrentgemma-9b", "gemma3-27b"}
+
+
+def cell_applicable(cfg: ModelConfig, cell: ShapeCell) -> tuple:
+    """(ok, reason)."""
+    if cell.name == "long_500k" and cfg.name not in LONG_OK:
+        return False, "pure full-attention arch: 500k KV cache per layer is quadratic-regime; skipped per assignment"
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = cell.global_batch, cell.seq_len
+    p = cfg.prefix_len or 0
+    if cell.kind == "train":
+        spec = {
+            "tokens": _sds((b, s - p), jnp.int32),
+            "labels": _sds((b, s - p), jnp.int32),
+        }
+        if p:
+            spec["prefix_embeds"] = _sds((b, p, cfg.d_model), cfg.cdtype())
+        return spec
+    if cell.kind == "prefill":
+        spec = {"tokens": _sds((b, s - p), jnp.int32)}
+        if p:
+            spec["prefix_embeds"] = _sds((b, p, cfg.d_model), cfg.cdtype())
+        spec["caches"] = cache_specs(cfg, b, s)
+        return spec
+    if cell.kind == "decode":
+        return {
+            "token": _sds((b, 1), jnp.int32),
+            "pos": _sds((), jnp.int32),
+            "caches": cache_specs(cfg, b, s),
+        }
+    raise ValueError(cell.kind)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq: int):
+    """Decode-cache ShapeDtypeStructs via eval_shape (zero allocation)."""
+    return jax.eval_shape(
+        lambda: make_decode_caches(cfg, batch, seq, cfg.cdtype())
+    )
+
+
+def params_specs(cfg: ModelConfig):
+    from repro.models import init_params
+
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def opt_specs(params_shapes):
+    from repro.optim import adamw_init
+
+    return jax.eval_shape(adamw_init, params_shapes)

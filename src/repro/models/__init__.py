@@ -1,0 +1,19 @@
+from .common import ModelConfig
+from .model import (
+    decode_step,
+    forward,
+    init_params,
+    loss_fn,
+    make_decode_caches,
+    prefill,
+)
+
+__all__ = [
+    "ModelConfig",
+    "decode_step",
+    "forward",
+    "init_params",
+    "loss_fn",
+    "make_decode_caches",
+    "prefill",
+]

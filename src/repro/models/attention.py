@@ -1,0 +1,128 @@
+"""GQA attention (full / sliding-window), RoPE, qk-norm; train + decode paths."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import (
+    ModelConfig,
+    apply_rope,
+    causal_mask,
+    local_mask,
+    normal_init,
+    rms_norm,
+)
+
+
+def init_attn(key, cfg: ModelConfig):
+    d, h, kv, dh, dv = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.v_dim
+    ks = jax.random.split(key, 4)
+    s = d**-0.5
+    p = {
+        "wq": normal_init(ks[0], (d, h * dh), cfg.pdtype(), s),
+        "wk": normal_init(ks[1], (d, kv * dh), cfg.pdtype(), s),
+        "wv": normal_init(ks[2], (d, kv * dv), cfg.pdtype(), s),
+        "wo": normal_init(ks[3], (h * dv, d), cfg.pdtype(), (h * dv) ** -0.5),
+    }
+    if cfg.qk_norm:
+        p["q_gamma"] = jnp.zeros((dh,), cfg.pdtype())
+        p["k_gamma"] = jnp.zeros((dh,), cfg.pdtype())
+    return p
+
+
+def _qkv(p, x, cos, sin, cfg: ModelConfig):
+    b, s, _ = x.shape
+    h, kv, dh, dv = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.v_dim
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(b, s, h, dh)
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"]).reshape(b, s, kv, dh)
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"]).reshape(b, s, kv, dv)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_gamma"])
+        k = rms_norm(k, p["k_gamma"])
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, cfg: ModelConfig):
+    """q (B,S,H,dh), k/v (B,T,KV,*); grouped-query causal attention."""
+    b, s, h, dh = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    q = q.reshape(b, s, kvh, g, dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k).astype(jnp.float32)
+    scores = scores * (dh**-0.5)
+    scores = jnp.where(mask[None, None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkv->bskgv", probs, v)
+    return out.reshape(b, s, h * v.shape[-1])
+
+
+def attn_apply(p, x, cos, sin, cfg: ModelConfig, *, window: int = 0):
+    """Training/prefill forward.  window>0 -> sliding-window attention."""
+    s = x.shape[1]
+    mask = local_mask(s, s, window) if window else causal_mask(s, s)
+    q, k, v = _qkv(p, x, cos, sin, cfg)
+    out = _sdpa(q, k, v, mask, cfg)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"])
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, slots: int, dtype):
+    """Ring-buffer KV cache.  ``slots`` = seq for full attention, window for
+    sliding-window layers; one code path covers both (slot = pos % slots,
+    masking from the per-slot absolute-position map)."""
+    kv, dh, dv = cfg.n_kv_heads, cfg.head_dim, cfg.v_dim
+    return {
+        "k": jnp.zeros((batch, slots, kv, dh), dtype),
+        "v": jnp.zeros((batch, slots, kv, dv), dtype),
+        "pos": jnp.full((slots,), -1, jnp.int32),  # absolute pos per slot
+    }
+
+
+def _ring_mask(pos_map, pos, window: int):
+    m = (pos_map >= 0) & (pos_map <= pos)
+    if window:
+        m = m & (pos_map > pos - window)
+    return m[None, :]  # (1, slots) -> broadcast over query dim
+
+
+def attn_prefill(p, x, cos, sin, cfg: ModelConfig, cache, *, window: int = 0):
+    """Forward over a prompt, writing the (last ``slots``) KV into the ring."""
+    q, k, v = _qkv(p, x, cos, sin, cfg)
+    s = x.shape[1]
+    slots = cache["k"].shape[1]
+    w = min(s, slots)
+    slot_idx = (jnp.arange(w) + (s - w)) % slots
+    ck = cache["k"].at[:, slot_idx].set(k[:, s - w :].astype(cache["k"].dtype))
+    cv = cache["v"].at[:, slot_idx].set(v[:, s - w :].astype(cache["v"].dtype))
+    cpos = cache["pos"].at[slot_idx].set(jnp.arange(s - w, s, dtype=jnp.int32))
+    mask = local_mask(s, s, window) if window else causal_mask(s, s)
+    out = _sdpa(q, k, v, mask, cfg)
+    return (
+        jnp.einsum("bsh,hd->bsd", out, p["wo"]),
+        {"k": ck, "v": cv, "pos": cpos},
+    )
+
+
+def attn_decode(p, x, cos, sin, cfg: ModelConfig, cache, pos, *, window: int = 0):
+    """One-token decode.  x (B,1,D); ring cache; ``pos`` scalar (0-based)."""
+    pos = jnp.asarray(pos, jnp.int32)
+    q, k, v = _qkv(p, x, cos, sin, cfg)  # s=1
+    slots = cache["k"].shape[1]
+    slot = pos % slots
+    ck = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0)
+    )
+    cv = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0)
+    )
+    cpos = jax.lax.dynamic_update_slice(
+        cache["pos"], pos[None].astype(jnp.int32), (slot,)
+    )
+    mask = _ring_mask(cpos, pos, window)
+    out = _sdpa(q, ck, cv, mask, cfg)
+    return (
+        jnp.einsum("bsh,hd->bsd", out, p["wo"]),
+        {"k": ck, "v": cv, "pos": cpos},
+    )

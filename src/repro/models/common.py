@@ -1,0 +1,212 @@
+"""Shared model-substrate pieces: config schema, init helpers, norms, RoPE.
+
+Pure JAX (no flax): params are nested dicts of arrays; every layer is a pair
+of (init_fn, apply_fn)-style plain functions.  All shapes/dtypes flow from
+``ModelConfig`` so the same code serves 135M..33B configs and the reduced
+smoke variants.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int  # logical
+    d_head: int = 0  # 0 -> d_model // n_heads
+
+    # attention variant
+    attn_type: str = "full"  # full | mla | none
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    # layer pattern: per-period block kinds; tiled/truncated to n_layers.
+    # kinds: "attn" (type per attn_type), "local" (sliding window attn),
+    #        "ssm" (mamba2), "rglru" (griffin recurrent block)
+    pattern: Sequence[str] = ("attn",)
+    local_window: int = 1024
+
+    # MLA (deepseek-v2)
+    kv_lora_rank: int = 0
+    qk_rope_dim: int = 64
+    v_head_dim: int = 0  # 0 -> d_head
+
+    # MoE
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    experts_per_token: int = 1
+    d_expert: int = 0  # routed-expert FFN width (0 -> d_ff)
+    first_k_dense: int = 0  # leading layers use a dense MLP (deepseek style)
+    moe_capacity_factor: float = 1.25
+
+    # SSM (mamba2)
+    ssm_state: int = 128
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv: int = 4
+    ssm_chunk: int = 128
+
+    # RG-LRU (recurrentgemma)
+    rglru_expand: int = 1  # d_rnn = rglru_expand * d_model (9b uses ~1.0)
+    rglru_conv: int = 4
+
+    # modality frontend stub (audio/vlm): length of precomputed prefix embeds
+    prefix_len: int = 0
+
+    # numerics
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    # scan-over-layers keeps HLO small (deploy default); unrolled mode exists
+    # because XLA cost_analysis counts while-loop bodies ONCE, so the roofline
+    # pass lowers unrolled for truthful flops/bytes (see launch/dryrun.py)
+    scan_layers: bool = True
+    # loss seq-chunking uses scan too; same roofline consideration
+    scan_loss: bool = True
+    # ---- sharding-strategy knobs (hillclimb variants; see EXPERIMENTS §Perf)
+    # pure_dp: spread the batch over the model axis too (TP disabled).  The
+    # right call when n_heads doesn't divide the TP width, where TP would
+    # replicate the whole attention computation per chip.
+    pure_dp: bool = False
+    # remat: recompute activations in backward (trades flops for HBM)
+    remat: bool = False
+    # zero1: shard ONLY the optimizer state over the data axis; params are
+    # TP-sharded but data-replicated for compute.  Fixes the ZeRO-3-style
+    # pathology where XLA all-gathers full-batch activations to form
+    # contraction-dim-sharded weight grads (see EXPERIMENTS.md §Perf).
+    zero1: bool = False
+    # bf16_norm: keep the residual stream bf16 through rms_norm so TP
+    # all-reduces move bf16, not hoisted-f32 (halves collective bytes)
+    bf16_norm: bool = False
+    # mla_materialize: full-sequence MLA paths (train/prefill) materialize
+    # K/V from the latent instead of the absorbed form.  Absorption is right
+    # for decode (cache stays latent-sized) but makes the S^2 term scale with
+    # kv_lora_rank (512) instead of head_dim (192/128) — ~3x more flops at
+    # long S (§Perf cell 4).
+    mla_materialize: bool = False
+    vocab_pad_to: int = 256
+    tie_embeddings: bool = False
+    loss_chunk: int = 512  # seq chunk for the fused/chunked xent loss
+
+    # serving
+    max_seq_len: int = 8192
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+    @property
+    def v_dim(self) -> int:
+        return self.v_head_dim or self.head_dim
+
+    @property
+    def padded_vocab(self) -> int:
+        return round_up(self.vocab_size, self.vocab_pad_to)
+
+    @property
+    def layer_kinds(self) -> tuple:
+        """Per-layer block kind, pattern tiled to n_layers."""
+        p = list(self.pattern)
+        kinds = (p * ((self.n_layers + len(p) - 1) // len(p)))[: self.n_layers]
+        return tuple(kinds)
+
+    @property
+    def period(self) -> int:
+        return len(self.pattern)
+
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def param_count(self) -> int:
+        """Total (and active) params — used for roofline MODEL_FLOPS."""
+        shapes = jax.eval_shape(lambda: init_placeholder(self))
+        return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(shapes))
+
+
+def init_placeholder(cfg):  # resolved lazily to avoid a circular import
+    from .model import init_params
+
+    return init_params(jax.random.PRNGKey(0), cfg)
+
+
+# ----------------------------------------------------------------- layers
+
+
+def normal_init(key, shape, dtype, scale: float):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def rms_norm(x, gamma, eps: float = 1e-6, *, upcast: bool = True):
+    """RMSNorm.  ``upcast=False`` keeps the (B,S,D) tensor in its input dtype
+    (variance still accumulates in f32): prevents XLA from hoisting the f32
+    conversion across the TP all-reduce boundary, halving collective bytes
+    (§Perf bf16_norm variant)."""
+    if upcast:
+        dt = x.dtype
+        x = x.astype(jnp.float32)
+        var = jnp.mean(x * x, axis=-1, keepdims=True)
+        out = x * jax.lax.rsqrt(var + eps) * (1.0 + gamma.astype(jnp.float32))
+        return out.astype(dt)
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)  # fused; (B,S,1) only
+    scale = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * scale * (1.0 + gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope_angles(positions, dim: int, theta: float):
+    """positions (...,) -> cos/sin (..., dim/2)."""
+    half = dim // 2
+    freqs = 1.0 / (
+        theta ** (jnp.arange(0, half, dtype=jnp.float32) / half)
+    )
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x (..., S, H, D) with cos/sin (S, D/2) or broadcastable."""
+    d = x.shape[-1]
+    x1, x2 = x[..., : d // 2], x[..., d // 2 :]
+    # cos/sin enter as (S, D/2): insert the head axis
+    c = cos[..., :, None, :]
+    s = sin[..., :, None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    """SwiGLU MLP: down( silu(x@gate) * (x@up) )."""
+    g = jax.nn.silu(jnp.einsum("...d,df->...f", x, w_gate))
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", g * u, w_down)
+
+
+def causal_mask(s_q: int, s_k: int, q_offset: int = 0):
+    """(s_q, s_k) bool; True = attend.  q position i attends k positions <= i."""
+    qi = jnp.arange(s_q)[:, None] + q_offset
+    kj = jnp.arange(s_k)[None, :]
+    return kj <= qi
+
+
+def local_mask(s_q: int, s_k: int, window: int, q_offset: int = 0):
+    qi = jnp.arange(s_q)[:, None] + q_offset
+    kj = jnp.arange(s_k)[None, :]
+    return (kj <= qi) & (kj > qi - window)

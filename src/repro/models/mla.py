@@ -1,0 +1,150 @@
+"""Multi-head Latent Attention (DeepSeek-V2): compressed-KV attention.
+
+KV is down-projected to a small latent (kv_lora_rank) plus a shared RoPE key
+slice; the latent is what the decode cache stores (the whole point of MLA:
+cache bytes shrink by ~an order of magnitude).  Decode uses the *absorbed*
+formulation — W_uk folds into the query so scores contract directly against
+the cached latent, never re-materializing full K.
+
+DeepSeek-V2-*Lite* (our assigned config) has no Q compression
+(q_lora_rank = null upstream), so queries project directly from d_model.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, causal_mask, normal_init, rms_norm, rope_angles
+
+
+def init_mla(key, cfg: ModelConfig):
+    d, h = cfg.d_model, cfg.n_heads
+    dh, dr, dv, r = cfg.head_dim, cfg.qk_rope_dim, cfg.v_dim, cfg.kv_lora_rank
+    ks = jax.random.split(key, 6)
+    s = d**-0.5
+    return {
+        # queries: nope part (dh) + rope part (dr) per head
+        "wq": normal_init(ks[0], (d, h * (dh + dr)), cfg.pdtype(), s),
+        # latent down-projection + shared rope-key slice
+        "w_dkv": normal_init(ks[1], (d, r + dr), cfg.pdtype(), s),
+        "kv_gamma": jnp.zeros((r,), cfg.pdtype()),
+        # latent up-projections
+        "w_uk": normal_init(ks[2], (r, h * dh), cfg.pdtype(), r**-0.5),
+        "w_uv": normal_init(ks[3], (r, h * dv), cfg.pdtype(), r**-0.5),
+        "wo": normal_init(ks[4], (h * dv, d), cfg.pdtype(), (h * dv) ** -0.5),
+    }
+
+
+def _rope_1d(x, cos, sin):
+    """x (..., S, H, dr) rotated with cos/sin (S, dr/2)."""
+    d = x.shape[-1]
+    x1, x2 = x[..., : d // 2], x[..., d // 2 :]
+    c, s = cos[..., :, None, :], sin[..., :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], -1).astype(x.dtype)
+
+
+def _project_q(p, x, cos, sin, cfg: ModelConfig):
+    b, s, _ = x.shape
+    h, dh, dr = cfg.n_heads, cfg.head_dim, cfg.qk_rope_dim
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(b, s, h, dh + dr)
+    q_nope, q_rope = q[..., :dh], q[..., dh:]
+    q_rope = _rope_1d(q_rope, cos, sin)
+    return q_nope, q_rope
+
+
+def _latent(p, x, cos, sin, cfg: ModelConfig):
+    r, dr = cfg.kv_lora_rank, cfg.qk_rope_dim
+    ckv = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"])
+    c, k_rope = ckv[..., :r], ckv[..., r:]
+    c = rms_norm(c, p["kv_gamma"])
+    k_rope = _rope_1d(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]  # shared head
+    return c, k_rope
+
+
+def _mla_scores_absorbed(p, q_nope, q_rope, c, k_rope, cfg: ModelConfig):
+    """Scores against the latent cache via the absorbed W_uk."""
+    h, dh, dr, r = cfg.n_heads, cfg.head_dim, cfg.qk_rope_dim, cfg.kv_lora_rank
+    w_uk = p["w_uk"].reshape(r, h, dh)
+    # absorb: q_eff[b,s,h,r] = q_nope[b,s,h,dh] . w_uk[r,h,dh]
+    q_eff = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk)
+    scores = jnp.einsum("bshr,btr->bhst", q_eff, c)
+    scores = scores + jnp.einsum("bshd,btd->bhst", q_rope, k_rope)
+    return scores.astype(jnp.float32) * ((dh + dr) ** -0.5)
+
+
+def _mla_out(p, probs, c, cfg: ModelConfig):
+    h, dv, r = cfg.n_heads, cfg.v_dim, cfg.kv_lora_rank
+    w_uv = p["w_uv"].reshape(r, h, dv)
+    ctx = jnp.einsum("bhst,btr->bshr", probs, c)  # context in latent space
+    out = jnp.einsum("bshr,rhv->bshv", ctx, w_uv)
+    out = out.reshape(out.shape[0], out.shape[1], h * dv)
+    return jnp.einsum("bsf,fd->bsd", out, p["wo"])
+
+
+def _mla_attend_materialized(p, q_nope, q_rope, c, k_rope, mask, cfg):
+    """Full-seq attention with K/V materialized from the latent: the S^2
+    term contracts over head_dim (+rope) instead of 2x kv_lora_rank."""
+    h, dh, dr, dv, r = (
+        cfg.n_heads, cfg.head_dim, cfg.qk_rope_dim, cfg.v_dim, cfg.kv_lora_rank
+    )
+    b, t, _ = c.shape
+    k_nope = jnp.einsum("btr,rhd->bthd", c, p["w_uk"].reshape(r, h, dh))
+    v = jnp.einsum("btr,rhv->bthv", c, p["w_uv"].reshape(r, h, dv))
+    scores = jnp.einsum("bshd,bthd->bhst", q_nope, k_nope)
+    scores = scores + jnp.einsum("bshd,btd->bhst", q_rope, k_rope)
+    scores = scores.astype(jnp.float32) * ((dh + dr) ** -0.5)
+    scores = jnp.where(mask[None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhst,bthv->bshv", probs, v)
+    out = out.reshape(b, q_nope.shape[1], h * dv)
+    return jnp.einsum("bsf,fd->bsd", out, p["wo"])
+
+
+def mla_apply(p, x, cos, sin, cfg: ModelConfig):
+    s = x.shape[1]
+    q_nope, q_rope = _project_q(p, x, cos, sin, cfg)
+    c, k_rope = _latent(p, x, cos, sin, cfg)
+    mask = causal_mask(s, s)
+    if cfg.mla_materialize:
+        return _mla_attend_materialized(p, q_nope, q_rope, c, k_rope, mask, cfg)
+    scores = _mla_scores_absorbed(p, q_nope, q_rope, c, k_rope, cfg)
+    scores = jnp.where(mask[None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(c.dtype)
+    return _mla_out(p, probs, c, cfg)
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, seq: int, dtype):
+    return {
+        "c": jnp.zeros((batch, seq, cfg.kv_lora_rank), dtype),
+        "kr": jnp.zeros((batch, seq, cfg.qk_rope_dim), dtype),
+    }
+
+
+def mla_prefill(p, x, cos, sin, cfg: ModelConfig, cache):
+    s = x.shape[1]
+    q_nope, q_rope = _project_q(p, x, cos, sin, cfg)
+    c, k_rope = _latent(p, x, cos, sin, cfg)
+    cache = {
+        "c": jax.lax.dynamic_update_slice(cache["c"], c.astype(cache["c"].dtype), (0, 0, 0)),
+        "kr": jax.lax.dynamic_update_slice(cache["kr"], k_rope.astype(cache["kr"].dtype), (0, 0, 0)),
+    }
+    mask = causal_mask(s, s)
+    if cfg.mla_materialize:  # cache stays latent; attention runs materialized
+        return _mla_attend_materialized(p, q_nope, q_rope, c, k_rope, mask, cfg), cache
+    scores = _mla_scores_absorbed(p, q_nope, q_rope, c, k_rope, cfg)
+    scores = jnp.where(mask[None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(c.dtype)
+    return _mla_out(p, probs, c, cfg), cache
+
+
+def mla_decode(p, x, cos, sin, cfg: ModelConfig, cache, pos):
+    q_nope, q_rope = _project_q(p, x, cos, sin, cfg)  # s = 1
+    c1, kr1 = _latent(p, x, cos, sin, cfg)
+    cc = jax.lax.dynamic_update_slice(cache["c"], c1.astype(cache["c"].dtype), (0, pos, 0))
+    ckr = jax.lax.dynamic_update_slice(cache["kr"], kr1.astype(cache["kr"].dtype), (0, pos, 0))
+    scores = _mla_scores_absorbed(p, q_nope, q_rope, cc, ckr, cfg)
+    mask = jnp.arange(cc.shape[1]) <= pos
+    scores = jnp.where(mask[None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(cc.dtype)
+    return _mla_out(p, probs, cc, cfg), {"c": cc, "kr": ckr}

@@ -1,0 +1,153 @@
+"""Public model API: init / forward / loss / prefill / decode for any config.
+
+Inputs contract (matches launch.input_specs):
+  train:   {"tokens": (B, S) i32, "labels": (B, S) i32}
+           [+ "prefix_embeds": (B, P, d_model) for audio/vlm stub frontends]
+  prefill: {"tokens": (B, S) i32} [+ prefix_embeds]
+  decode:  {"token": (B, 1) i32, "pos": () i32} + caches
+
+The modality frontend for [audio]/[vlm] archs is a stub by assignment: the
+caller supplies precomputed frame/patch embeddings which are prepended to the
+token embeddings (loss is computed on token positions only).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, normal_init, rms_norm, rope_angles
+from .transformer import (
+    apply_stack,
+    decode_stack,
+    init_caches,
+    init_stack,
+    prefill_stack,
+)
+
+__all__ = [
+    "init_params",
+    "forward",
+    "loss_fn",
+    "prefill",
+    "decode_step",
+    "make_decode_caches",
+]
+
+
+def init_params(key, cfg: ModelConfig):
+    k_emb, k_stack, k_out, k_norm = jax.random.split(key, 4)
+    v = cfg.padded_vocab
+    p = {
+        "embed": normal_init(k_emb, (v, cfg.d_model), cfg.pdtype(), cfg.d_model**-0.5),
+        "layers": init_stack(k_stack, cfg),
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.pdtype()),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = normal_init(
+            k_out, (cfg.d_model, v), cfg.pdtype(), cfg.d_model**-0.5
+        )
+    return p
+
+
+def _embed(params, cfg: ModelConfig, tokens, prefix_embeds=None):
+    x = params["embed"][tokens].astype(cfg.cdtype())
+    x = x * jnp.asarray(cfg.d_model**0.5, cfg.cdtype())
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(cfg.cdtype()), x], axis=1)
+    return x
+
+
+def _rope(cfg: ModelConfig, positions):
+    dim = cfg.qk_rope_dim if cfg.attn_type == "mla" else cfg.head_dim
+    return rope_angles(positions, dim, cfg.rope_theta)
+
+
+def forward(params, cfg: ModelConfig, tokens, prefix_embeds=None):
+    """Full-sequence hidden states.  Returns (x (B,S,D), aux_loss)."""
+    x = _embed(params, cfg, tokens, prefix_embeds)
+    s = x.shape[1]
+    cos, sin = _rope(cfg, jnp.arange(s))
+    x, aux = apply_stack(params["layers"], x, cos, sin, cfg)
+    return rms_norm(x, params["final_norm"], upcast=not cfg.bf16_norm), aux
+
+
+def _unembed_weight(params):
+    return (
+        params["unembed"] if "unembed" in params else params["embed"].T
+    )
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    """Chunked next-token cross-entropy (never materializes (B,S,V) at once).
+
+    batch: tokens (B,S), labels (B,S) with -1 = masked; optional prefix_embeds
+    (prefix positions carry no loss).  Returns (loss, metrics).
+    """
+    x, aux = forward(
+        params, cfg, batch["tokens"], batch.get("prefix_embeds")
+    )
+    p_len = x.shape[1] - batch["tokens"].shape[1]
+    x = x[:, p_len:]  # loss on token positions only
+    labels = batch["labels"]
+    w = _unembed_weight(params)
+
+    b, s, d = x.shape
+    c = min(cfg.loss_chunk, s)
+    if s % c:
+        c = s
+    xc = x.reshape(b, s // c, c, d).swapaxes(0, 1)  # (nc, B, c, d)
+    lc = labels.reshape(b, s // c, c).swapaxes(0, 1)
+
+    def chunk_loss(carry, inp):
+        xx, ll = inp
+        logits = jnp.einsum("bcd,dv->bcv", xx, w).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.clip(ll, 0)[..., None], axis=-1
+        )[..., 0]
+        mask = (ll >= 0).astype(jnp.float32)
+        nll = jnp.sum((logz - gold) * mask)
+        zl = jnp.sum((logz**2) * mask)  # z-loss stabilizer
+        return (carry[0] + nll, carry[1] + zl, carry[2] + mask.sum()), None
+
+    init = (jnp.zeros(()), jnp.zeros(()), jnp.zeros(()))
+    if cfg.scan_loss:
+        (nll, zl, denom), _ = jax.lax.scan(chunk_loss, init, (xc, lc))
+    else:  # unrolled for truthful cost_analysis (roofline mode)
+        carry = init
+        for i in range(xc.shape[0]):
+            carry, _ = chunk_loss(carry, (xc[i], lc[i]))
+        nll, zl, denom = carry
+    denom = jnp.maximum(denom, 1.0)
+    loss = nll / denom + 1e-4 * zl / denom + 0.01 * aux
+    return loss, {"nll": nll / denom, "aux": aux, "tokens": denom}
+
+
+def make_decode_caches(cfg: ModelConfig, batch: int, seq: int, dtype=None):
+    dtype = dtype or cfg.cdtype()
+    return init_caches(cfg, batch, seq, dtype)
+
+
+def prefill(params, cfg: ModelConfig, tokens, caches, prefix_embeds=None):
+    """Prompt pass: returns (last-position logits (B, V), caches)."""
+    x = _embed(params, cfg, tokens, prefix_embeds)
+    s = x.shape[1]
+    cos, sin = _rope(cfg, jnp.arange(s))
+    x, caches = prefill_stack(params["layers"], caches, x, cos, sin, cfg)
+    x = rms_norm(x[:, -1:], params["final_norm"], upcast=not cfg.bf16_norm)
+    logits = jnp.einsum("bsd,dv->bsv", x, _unembed_weight(params))
+    return logits[:, 0].astype(jnp.float32), caches
+
+
+def decode_step(params, cfg: ModelConfig, token, pos, caches):
+    """One-token decode: token (B,1) i32, pos scalar i32 (absolute position).
+
+    Returns (logits (B, V) f32, caches)."""
+    x = _embed(params, cfg, token)
+    pos = jnp.asarray(pos, jnp.int32)
+    cos, sin = _rope(cfg, pos[None])
+    x, caches = decode_stack(params["layers"], caches, x, cos, sin, cfg, pos)
+    x = rms_norm(x, params["final_norm"], upcast=not cfg.bf16_norm)
+    logits = jnp.einsum("bsd,dv->bsv", x, _unembed_weight(params))
+    return logits[:, 0].astype(jnp.float32), caches

@@ -1,0 +1,97 @@
+"""Mixture-of-Experts MLP: shared experts + routed top-k, sort-based dispatch.
+
+Sort-based (MegaBlocks-style) dispatch instead of the GShard (T, E, C) one-hot
+combine tensor: token->expert assignments are argsorted by expert id, slotted
+into fixed-capacity expert buffers (static shapes, drop-on-overflow), run as a
+single batched (E, C, d)x(E, d, f) einsum — which shards cleanly over the
+expert (model) mesh axis for expert parallelism — and scattered back with
+routing weights.  Aux load-balancing loss follows Switch.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, normal_init, swiglu
+
+
+def _expert_shapes(cfg: ModelConfig):
+    d = cfg.d_model
+    de = cfg.d_expert or cfg.d_ff
+    return d, de
+
+
+def init_moe(key, cfg: ModelConfig):
+    d, de = _expert_shapes(cfg)
+    e = cfg.n_experts
+    ks = jax.random.split(key, 5)
+    s = d**-0.5
+    p = {
+        "router": normal_init(ks[0], (d, e), jnp.float32, s),
+        "w_gate": normal_init(ks[1], (e, d, de), cfg.pdtype(), s),
+        "w_up": normal_init(ks[2], (e, d, de), cfg.pdtype(), s),
+        "w_down": normal_init(ks[3], (e, de, d), cfg.pdtype(), de**-0.5),
+    }
+    if cfg.n_shared_experts:
+        dsh = de * cfg.n_shared_experts
+        kss = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": normal_init(kss[0], (d, dsh), cfg.pdtype(), s),
+            "w_up": normal_init(kss[1], (d, dsh), cfg.pdtype(), s),
+            "w_down": normal_init(kss[2], (dsh, d), cfg.pdtype(), dsh**-0.5),
+        }
+    return p
+
+
+def moe_apply(p, x, cfg: ModelConfig):
+    """x (B, S, D) -> (out (B, S, D), aux_loss scalar)."""
+    capacity_factor = cfg.moe_capacity_factor
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    t = b * s
+    xt = x.reshape(t, d)
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert = jax.lax.top_k(probs, k)  # (T, k)
+    gate = (gate / jnp.clip(gate.sum(-1, keepdims=True), 1e-9)).astype(x.dtype)
+
+    # Switch aux loss: fraction of tokens routed * mean router prob, per expert
+    me = probs.mean(axis=0)  # (E,)
+    ce = jnp.zeros((e,), jnp.float32).at[expert.reshape(-1)].add(1.0) / (t * k)
+    aux = e * jnp.sum(me * ce)
+
+    cap = int(max(1, capacity_factor * t * k / e))
+    flat_e = expert.reshape(-1)  # (T*k,)
+    order = jnp.argsort(flat_e)  # group by expert
+    sorted_e = flat_e[order]
+    # rank within expert group
+    counts = jnp.bincount(flat_e, length=e)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(t * k) - starts[sorted_e]
+    keep = rank < cap
+    slot = sorted_e * cap + jnp.clip(rank, 0, cap - 1)  # (T*k,) in [0, E*cap)
+    token_of = order // k  # token index of each sorted assignment
+
+    # dispatch: (E*cap, d) buffers
+    buf = jnp.zeros((e * cap, d), x.dtype)
+    buf = buf.at[jnp.where(keep, slot, e * cap)].set(  # OOB slot -> dropped
+        xt[token_of], mode="drop"
+    )
+    buf = buf.reshape(e, cap, d)
+
+    # expert FFN, batched over experts (shards on the expert axis = EP)
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"]))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    y = jnp.einsum("ecf,efd->ecd", g * u, p["w_down"]).reshape(e * cap, d)
+
+    # combine: gather back, weight, sum over k assignments
+    y_tok = jnp.where(keep[:, None], y[slot], 0.0)  # (T*k, d) sorted order
+    w = gate.reshape(-1)[order]
+    out = jnp.zeros((t, d), x.dtype).at[token_of].add(y_tok * w[:, None])
+
+    if cfg.n_shared_experts:
+        sp = p["shared"]
+        out = out + swiglu(xt, sp["w_gate"], sp["w_up"], sp["w_down"])
+    return out.reshape(b, s, d), aux

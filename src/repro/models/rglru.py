@@ -1,0 +1,126 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma temporal mixing).
+
+    r_t = sigmoid(W_r u_t + b_r)          recurrence gate
+    i_t = sigmoid(W_i u_t + b_i)          input gate
+    a_t = exp(-c * softplus(L) * r_t)     per-channel learned decay (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+Training/prefill evaluates the diagonal linear recurrence with
+``lax.associative_scan`` (log-depth, TPU-friendly); decode is the O(1) step.
+The full temporal block is: conv1d -> RG-LRU on one branch, GeLU gate on the
+other, merged by an output projection (Griffin Fig. 2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, normal_init
+
+_C = 8.0
+
+
+def rnn_width(cfg: ModelConfig) -> int:
+    return cfg.rglru_expand * cfg.d_model
+
+
+def init_rglru(key, cfg: ModelConfig):
+    d = cfg.d_model
+    dr = rnn_width(cfg)
+    ks = jax.random.split(key, 6)
+    s = d**-0.5
+    return {
+        "w_x": normal_init(ks[0], (d, dr), cfg.pdtype(), s),
+        "w_gate": normal_init(ks[1], (d, dr), cfg.pdtype(), s),
+        "conv_w": normal_init(ks[2], (cfg.rglru_conv, dr), cfg.pdtype(), 0.5),
+        "conv_b": jnp.zeros((dr,), cfg.pdtype()),
+        "w_r": normal_init(ks[3], (dr, dr), jnp.float32, dr**-0.5),
+        "b_r": jnp.zeros((dr,), jnp.float32),
+        "w_i": normal_init(ks[4], (dr, dr), jnp.float32, dr**-0.5),
+        "b_i": jnp.zeros((dr,), jnp.float32),
+        # softplus(lambda_raw) ~ uniform in a stable decay range
+        "lambda_raw": jnp.linspace(0.2, 1.2, dr, dtype=jnp.float32),
+        "w_out": normal_init(ks[5], (dr, d), cfg.pdtype(), dr**-0.5),
+    }
+
+
+def _gates(p, u):
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["w_r"] + p["b_r"])
+    i = jax.nn.sigmoid(uf @ p["w_i"] + p["b_i"])
+    log_a = -_C * jax.nn.softplus(p["lambda_raw"]) * r  # (..., dr), <= 0
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12)) * (i * uf)
+    return a, gated_in
+
+
+def _causal_conv(x, w, b, state=None):
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    full = jnp.concatenate([pad, x], axis=1)
+    out = sum(full[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k))
+    new_state = full[:, -(k - 1) :, :] if k > 1 else None
+    return out + b, new_state
+
+
+def rglru_apply(p, x, cfg: ModelConfig):
+    """Training/prefill forward.  x (B,S,D) -> (B,S,D)."""
+    u = jnp.einsum("bsd,df->bsf", x, p["w_x"])
+    u, _ = _causal_conv(u, p["conv_w"], p["conv_b"])
+    a, gin = _gates(p, u)
+
+    # h_t = a_t h_{t-1} + gin_t  via associative scan on (a, b) pairs
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    _, h = jax.lax.associative_scan(combine, (a, gin), axis=1)
+    gate = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w_gate"]))
+    y = gate * h.astype(x.dtype)
+    return jnp.einsum("bsf,fd->bsd", y, p["w_out"])
+
+
+def rglru_prefill(p, x, cfg: ModelConfig, cache):
+    """Prompt forward, returning recurrent + conv state for decode."""
+    u = jnp.einsum("bsd,df->bsf", x, p["w_x"])
+    u, conv_state = _causal_conv(u, p["conv_w"], p["conv_b"])
+    a, gin = _gates(p, u)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    _, h = jax.lax.associative_scan(combine, (a, gin), axis=1)
+    gate = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w_gate"]))
+    y = gate * h.astype(x.dtype)
+    out = jnp.einsum("bsf,fd->bsd", y, p["w_out"])
+    return out, {
+        "conv": conv_state.astype(cache["conv"].dtype),
+        "h": h[:, -1].astype(jnp.float32),
+    }
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype):
+    dr = rnn_width(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.rglru_conv - 1, dr), dtype),
+        "h": jnp.zeros((batch, dr), jnp.float32),
+    }
+
+
+def rglru_decode(p, x, cfg: ModelConfig, cache):
+    """One-token decode.  x (B,1,D)."""
+    u = jnp.einsum("bsd,df->bsf", x, p["w_x"])
+    u, conv_state = _causal_conv(u, p["conv_w"], p["conv_b"], state=cache["conv"])
+    a, gin = _gates(p, u[:, 0])
+    h = a * cache["h"] + gin
+    gate = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w_gate"]))
+    y = gate[:, 0] * h.astype(x.dtype)
+    out = jnp.einsum("bf,fd->bd", y, p["w_out"])[:, None, :]
+    return out, {"conv": conv_state, "h": h}

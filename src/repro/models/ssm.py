@@ -1,0 +1,212 @@
+"""Mamba-2 (SSD — state-space duality) mixing layer.
+
+Training/prefill uses the chunked SSD algorithm: intra-chunk terms are dense
+(L-masked) matmuls on the MXU; inter-chunk terms flow through a linear
+recurrence over per-chunk states (lax.scan over n_chunks).  Decode keeps the
+O(1)-in-seq recurrent state — the reason this family runs the long_500k cell.
+
+Conventions (n_groups = 1):
+  x:  (B, S, H, P)   inputs per head        (d_inner = H * P)
+  dt: (B, S, H)      softplus-discretized step
+  A:  (H,)           negative scalar decay per head
+  B,C:(B, S, N)      shared input/output projections (N = ssm_state)
+  h:  (B, H, P, N)   recurrent state
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, normal_init, rms_norm
+
+
+def dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def init_ssm(key, cfg: ModelConfig):
+    d = cfg.d_model
+    d_inner, h, p_, n = dims(cfg)
+    conv_ch = d_inner + 2 * n  # x, B, C go through the causal conv
+    ks = jax.random.split(key, 5)
+    s = d**-0.5
+    return {
+        # order: [z (gate), x, B, C, dt]
+        "w_in": normal_init(
+            ks[0], (d, 2 * d_inner + 2 * n + h), cfg.pdtype(), s
+        ),
+        "conv_w": normal_init(ks[1], (cfg.ssm_conv, conv_ch), cfg.pdtype(), 0.5),
+        "conv_b": jnp.zeros((conv_ch,), cfg.pdtype()),
+        "a_log": jnp.log(
+            jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)
+        ),  # A = -exp(a_log)
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm_gamma": jnp.zeros((d_inner,), cfg.pdtype()),
+        "w_out": normal_init(ks[2], (d_inner, d), cfg.pdtype(), d_inner**-0.5),
+    }
+
+
+def _split_proj(p, u, cfg: ModelConfig):
+    d_inner, h, p_, n = dims(cfg)
+    zxbcdt = jnp.einsum("bsd,df->bsf", u, p["w_in"])
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner : 2 * d_inner + 2 * n]
+    dt = zxbcdt[..., 2 * d_inner + 2 * n :]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b, state=None):
+    """Depthwise causal conv along S.  state (B, K-1, C) for decode carry."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    full = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(
+        full[:, i : i + xbc.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    new_state = full[:, -(k - 1) :, :] if k > 1 else None
+    return jax.nn.silu(out + b), new_state
+
+
+def _segsum(log_a):
+    """(..., L) -> (..., L, L) lower-tri cumulative sums: sum_{j<i..} log_a."""
+    l = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # sum over (j, i]
+    mask = jnp.tril(jnp.ones((l, l), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a, b, c, chunk: int):
+    """Chunked SSD.  x (B,S,H,P), dt (B,S,H), a (H,) negative, b/c (B,S,N).
+
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    bsz, s, h, p_ = x.shape
+    n = b.shape[-1]
+    assert s % chunk == 0
+    nc = s // chunk
+    xr = x.reshape(bsz, nc, chunk, h, p_)
+    dtr = dt.reshape(bsz, nc, chunk, h)
+    br = b.reshape(bsz, nc, chunk, n)
+    cr = c.reshape(bsz, nc, chunk, n)
+
+    log_a = dtr * a[None, None, None, :]  # (B,NC,L,H) negative
+    log_a = jnp.moveaxis(log_a, -1, 2)  # (B,NC,H,L)
+    seg = _segsum(log_a)  # (B,NC,H,L,L)
+
+    # intra-chunk (dual / attention-like) term
+    lmat = jnp.exp(seg)  # decay from j to i, lower-tri
+    cb = jnp.einsum("bzln,bzmn->bzlm", cr, br)  # (B,NC,L,L)
+    xdt = xr * dtr[..., None]  # (B,NC,L,H,P)
+    y_intra = jnp.einsum("bzlm,bzhlm,bzmhp->bzlhp", cb, lmat, xdt)
+
+    # per-chunk input state: decay from position m to chunk end
+    a_cum = jnp.cumsum(log_a, axis=-1)  # (B,NC,H,L)
+    decay_to_end = jnp.exp(a_cum[..., -1:] - a_cum)  # (B,NC,H,L)
+    chunk_state = jnp.einsum(
+        "bzmn,bzhm,bzmhp->bzhpn", br, decay_to_end, xdt
+    )  # (B,NC,H,P,N)
+
+    # inter-chunk recurrence over chunk states
+    a_chunk = jnp.exp(a_cum[..., -1])  # (B,NC,H) total chunk decay
+
+    def step(hprev, inp):
+        st, ac = inp  # (B,H,P,N), (B,H)
+        hnew = hprev * ac[..., None, None] + st
+        return hnew, hprev  # emit state *entering* the chunk
+
+    h0 = jnp.zeros((bsz, h, p_, n), x.dtype)
+    hlast, h_in = jax.lax.scan(
+        step,
+        h0,
+        (jnp.moveaxis(chunk_state, 1, 0), jnp.moveaxis(a_chunk, 1, 0)),
+    )
+    h_in = jnp.moveaxis(h_in, 0, 1)  # (B,NC,H,P,N) state entering each chunk
+
+    # inter-chunk output: decay from chunk start to position l
+    decay_from_start = jnp.exp(a_cum)  # (B,NC,H,L)
+    y_inter = jnp.einsum(
+        "bzln,bzhl,bzhpn->bzlhp", cr, decay_from_start, h_in
+    )
+
+    y = (y_intra + y_inter).reshape(bsz, s, h, p_)
+    return y, hlast
+
+
+def _ssm_fwd(p, u, cfg: ModelConfig):
+    d_inner, h, p_, n = dims(cfg)
+    bsz, s, _ = u.shape
+    z, xbc_raw, dt = _split_proj(p, u, cfg)
+    xbc, conv_state = _causal_conv(xbc_raw, p["conv_w"], p["conv_b"])
+    x = xbc[..., :d_inner].reshape(bsz, s, h, p_)
+    b = xbc[..., d_inner : d_inner + n]
+    c = xbc[..., d_inner + n :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    chunk = min(cfg.ssm_chunk, s)
+    if s % chunk:
+        chunk = s  # fallback: single chunk (small smoke shapes)
+    y, hlast = ssd_chunked(x.astype(jnp.float32), dt, a, b.astype(jnp.float32),
+                           c.astype(jnp.float32), chunk)
+    y = y + x.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, s, d_inner).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_gamma"])
+    out = jnp.einsum("bsf,fd->bsd", y, p["w_out"])
+    return out, hlast, conv_state
+
+
+def ssm_apply(p, u, cfg: ModelConfig):
+    """Training forward.  u (B,S,D) -> (B,S,D)."""
+    out, _, _ = _ssm_fwd(p, u, cfg)
+    return out
+
+
+def ssm_prefill(p, u, cfg: ModelConfig, cache):
+    """Prompt forward, returning the recurrent + conv state for decode."""
+    out, hlast, conv_state = _ssm_fwd(p, u, cfg)
+    return out, {
+        "conv": conv_state.astype(cache["conv"].dtype),
+        "state": hlast.astype(jnp.float32),
+    }
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype):
+    d_inner, h, p_, n = dims(cfg)
+    conv_ch = d_inner + 2 * n
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+        "state": jnp.zeros((batch, h, p_, n), jnp.float32),
+    }
+
+
+def ssm_decode(p, u, cfg: ModelConfig, cache):
+    """One-token decode.  u (B,1,D)."""
+    d_inner, h, p_, n = dims(cfg)
+    bsz = u.shape[0]
+    z, xbc, dt = _split_proj(p, u, cfg)
+    xbc, conv_state = _causal_conv(
+        xbc, p["conv_w"], p["conv_b"], state=cache["conv"]
+    )
+    x = xbc[:, 0, :d_inner].reshape(bsz, h, p_)
+    b = xbc[:, 0, d_inner : d_inner + n].astype(jnp.float32)
+    c = xbc[:, 0, d_inner + n :].astype(jnp.float32)
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["a_log"])
+    da = jnp.exp(dt1 * a[None, :])  # (B,H)
+    xdt = x.astype(jnp.float32) * dt1[..., None]  # (B,H,P)
+    hnew = cache["state"] * da[..., None, None] + jnp.einsum(
+        "bhp,bn->bhpn", xdt, b
+    )
+    y = jnp.einsum("bhpn,bn->bhp", hnew, c)
+    y = y + x.astype(jnp.float32) * p["d_skip"][None, :, None]
+    y = y.reshape(bsz, 1, d_inner).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_gamma"])
+    out = jnp.einsum("bsf,fd->bsd", y, p["w_out"])
+    return out, {"conv": conv_state, "state": hnew}

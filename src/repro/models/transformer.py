@@ -1,0 +1,360 @@
+"""Decoder assembly: residual blocks over a per-layer kind pattern, stacked
+group-scan for compile-time-bounded HLO, train/prefill/decode paths.
+
+Layer layout = prefix (unrolled, e.g. deepseek's first-k-dense) + scanned body
+(layers grouped by position within the repeating pattern period, params
+stacked across periods -> one lax.scan regardless of depth) + remainder
+suffix (unrolled).  Heterogeneous patterns (gemma3 5-local:1-global,
+recurrentgemma RR-L) scan over *period super-blocks* so every scanned slice
+has identical pytree structure.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import mla, moe, rglru, ssm
+from .common import ModelConfig, normal_init, rms_norm, rope_angles, swiglu
+
+# ------------------------------------------------------------- layer init
+
+
+def _layer_uses_moe(cfg: ModelConfig, idx: int) -> bool:
+    return cfg.n_experts > 0 and idx >= cfg.first_k_dense
+
+
+def _kind_has_mlp(kind: str) -> bool:
+    return kind != "ssm"  # mamba2 blocks are mixing-only
+
+
+def init_layer(key, cfg: ModelConfig, idx: int):
+    kind = cfg.layer_kinds[idx]
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"norm1": jnp.zeros((cfg.d_model,), cfg.pdtype())}
+    if kind in ("attn", "local"):
+        p["mix"] = attn.init_attn(k1, cfg) if cfg.attn_type != "mla" or kind == "local" else mla.init_mla(k1, cfg)
+    elif kind == "mla":
+        p["mix"] = mla.init_mla(k1, cfg)
+    elif kind == "ssm":
+        p["mix"] = ssm.init_ssm(k1, cfg)
+    elif kind == "rglru":
+        p["mix"] = rglru.init_rglru(k1, cfg)
+    else:
+        raise ValueError(f"unknown layer kind {kind!r}")
+    if _kind_has_mlp(kind):
+        p["norm2"] = jnp.zeros((cfg.d_model,), cfg.pdtype())
+        if _layer_uses_moe(cfg, idx):
+            p["mlp"] = moe.init_moe(k2, cfg)
+        else:
+            s = cfg.d_model**-0.5
+            kk = jax.random.split(k3, 3)
+            p["mlp"] = {
+                "w_gate": normal_init(kk[0], (cfg.d_model, cfg.d_ff), cfg.pdtype(), s),
+                "w_up": normal_init(kk[1], (cfg.d_model, cfg.d_ff), cfg.pdtype(), s),
+                "w_down": normal_init(kk[2], (cfg.d_ff, cfg.d_model), cfg.pdtype(), cfg.d_ff**-0.5),
+            }
+    return p
+
+
+def _resolve_kind(cfg: ModelConfig, kind: str) -> str:
+    """'attn' resolves to the config's attention type."""
+    if kind == "attn" and cfg.attn_type == "mla":
+        return "mla"
+    return kind
+
+
+# --------------------------------------------------------- forward blocks
+
+
+def apply_layer(p, x, cos, sin, cfg: ModelConfig, idx: int, kind: str):
+    """Training/prefill-style full-sequence block.  Returns (x, aux)."""
+    kind = _resolve_kind(cfg, kind)
+    h = rms_norm(x, p["norm1"], upcast=not cfg.bf16_norm)
+    if kind == "attn":
+        mix = attn.attn_apply(p["mix"], h, cos, sin, cfg)
+    elif kind == "local":
+        mix = attn.attn_apply(p["mix"], h, cos, sin, cfg, window=cfg.local_window)
+    elif kind == "mla":
+        mix = mla.mla_apply(p["mix"], h, cos, sin, cfg)
+    elif kind == "ssm":
+        mix = ssm.ssm_apply(p["mix"], h, cfg)
+    elif kind == "rglru":
+        mix = rglru.rglru_apply(p["mix"], h, cfg)
+    x = x + mix
+    aux = jnp.zeros((), jnp.float32)
+    if "mlp" in p:
+        h = rms_norm(x, p["norm2"], upcast=not cfg.bf16_norm)
+        if _layer_uses_moe(cfg, idx) and "router" in p["mlp"]:
+            out, aux = moe.moe_apply(p["mlp"], h, cfg)
+        else:
+            m = p["mlp"]
+            out = swiglu(h, m["w_gate"], m["w_up"], m["w_down"])
+        x = x + out
+    return x, aux
+
+
+def decode_layer(p, x, cos, sin, cfg: ModelConfig, idx: int, kind: str, cache, pos):
+    kind = _resolve_kind(cfg, kind)
+    h = rms_norm(x, p["norm1"], upcast=not cfg.bf16_norm)
+    if kind == "attn":
+        mix, cache = attn.attn_decode(p["mix"], h, cos, sin, cfg, cache, pos)
+    elif kind == "local":
+        mix, cache = attn.attn_decode(
+            p["mix"], h, cos, sin, cfg, cache, pos, window=cfg.local_window
+        )
+    elif kind == "mla":
+        mix, cache = mla.mla_decode(p["mix"], h, cos, sin, cfg, cache, pos)
+    elif kind == "ssm":
+        mix, cache = ssm.ssm_decode(p["mix"], h, cfg, cache)
+    elif kind == "rglru":
+        mix, cache = rglru.rglru_decode(p["mix"], h, cfg, cache)
+    x = x + mix
+    if "mlp" in p:
+        h = rms_norm(x, p["norm2"], upcast=not cfg.bf16_norm)
+        if _layer_uses_moe(cfg, idx) and "router" in p["mlp"]:
+            out, _ = moe.moe_apply(p["mlp"], h, cfg)
+        else:
+            m = p["mlp"]
+            out = swiglu(h, m["w_gate"], m["w_up"], m["w_down"])
+        x = x + out
+    return x, cache
+
+
+def prefill_layer(p, x, cos, sin, cfg: ModelConfig, idx: int, kind: str, cache):
+    kind = _resolve_kind(cfg, kind)
+    h = rms_norm(x, p["norm1"], upcast=not cfg.bf16_norm)
+    if kind == "attn":
+        mix, cache = attn.attn_prefill(p["mix"], h, cos, sin, cfg, cache)
+    elif kind == "local":
+        mix, cache = attn.attn_prefill(
+            p["mix"], h, cos, sin, cfg, cache, window=cfg.local_window
+        )
+    elif kind == "mla":
+        mix, cache = mla.mla_prefill(p["mix"], h, cos, sin, cfg, cache)
+    elif kind == "ssm":
+        mix, cache = ssm.ssm_prefill(p["mix"], h, cfg, cache)
+    elif kind == "rglru":
+        mix, cache = rglru.rglru_prefill(p["mix"], h, cfg, cache)
+    x = x + mix
+    if "mlp" in p:
+        h = rms_norm(x, p["norm2"], upcast=not cfg.bf16_norm)
+        if _layer_uses_moe(cfg, idx) and "router" in p["mlp"]:
+            out, _ = moe.moe_apply(p["mlp"], h, cfg)
+        else:
+            m = p["mlp"]
+            out = swiglu(h, m["w_gate"], m["w_up"], m["w_down"])
+        x = x + out
+    return x, cache
+
+
+def prefill_stack(params, caches, x, cos, sin, cfg: ModelConfig):
+    """Prompt forward through all layers, writing caches."""
+    pre, scanned, suffix = stack_plan(cfg)
+    kinds = cfg.layer_kinds
+    new_prefix = []
+    for i in pre:
+        x, c = prefill_layer(
+            params["prefix"][i], x, cos, sin, cfg, i, kinds[i], caches["prefix"][i]
+        )
+        new_prefix.append(c)
+    n_periods = len(scanned[0]) if scanned and scanned[0] else 0
+    new_body = caches["body"]
+    if n_periods:
+        body_kinds = [kinds[scanned[j][0]] for j in range(cfg.period)]
+        rep_idx = scanned[-1][0]
+
+        def scan_fn(x, slices):
+            slice_p, slice_c = slices
+            new_c = []
+            for j in range(cfg.period):
+                x, c = prefill_layer(
+                    slice_p[j], x, cos, sin, cfg, rep_idx, body_kinds[j], slice_c[j]
+                )
+                new_c.append(c)
+            return x, tuple(new_c)
+
+        xs = (tuple(params["body"]), tuple(caches["body"]))
+        if cfg.scan_layers:
+            x, new_body = jax.lax.scan(scan_fn, x, xs)
+            new_body = list(new_body)
+        else:
+            outs = []
+            for i in range(n_periods):
+                sl = jax.tree.map(lambda a: a[i], xs)
+                x, c = scan_fn(x, sl)
+                outs.append(c)
+            new_body = list(jax.tree.map(lambda *cs: jnp.stack(cs), *outs))
+    new_suffix = []
+    for n_, i in enumerate(suffix):
+        x, c = prefill_layer(
+            params["suffix"][n_], x, cos, sin, cfg, i, kinds[i], caches["suffix"][n_]
+        )
+        new_suffix.append(c)
+    return x, {"prefix": new_prefix, "body": new_body, "suffix": new_suffix}
+
+
+def init_layer_cache(cfg: ModelConfig, idx: int, kind: str, batch: int, seq: int, dtype):
+    kind = _resolve_kind(cfg, kind)
+    if kind in ("attn", "local"):
+        # sliding-window layers only ever need window slots
+        s = min(seq, cfg.local_window) if kind == "local" else seq
+        return attn.init_kv_cache(cfg, batch, max(s, 1), dtype)
+    if kind == "mla":
+        return mla.init_mla_cache(cfg, batch, seq, dtype)
+    if kind == "ssm":
+        return ssm.init_ssm_cache(cfg, batch, dtype)
+    if kind == "rglru":
+        return rglru.init_rglru_cache(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+# ------------------------------------------------------ stack organization
+
+
+def stack_plan(cfg: ModelConfig):
+    """(prefix_ids, scan_periods, suffix_ids); body grouped by period."""
+    n = cfg.n_layers
+    pre = list(range(cfg.first_k_dense))
+    period = cfg.period
+    body_start = len(pre)
+    n_body = n - body_start
+    n_periods = n_body // period
+    scanned = [
+        [body_start + i * period + j for i in range(n_periods)]
+        for j in range(period)
+    ]
+    suffix = list(range(body_start + n_periods * period, n))
+    return pre, scanned, suffix
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_stack(key, cfg: ModelConfig):
+    """Params pytree: {'prefix': [..], 'body': [stacked_j ..], 'suffix': [..]}."""
+    pre, scanned, suffix = stack_plan(cfg)
+    keys = jax.random.split(key, cfg.n_layers)
+    prefix_p = [init_layer(keys[i], cfg, i) for i in pre]
+    body_p = []
+    for j, ids in enumerate(scanned):
+        if ids:
+            body_p.append(_stack([init_layer(keys[i], cfg, i) for i in ids]))
+        else:
+            body_p.append({})
+    suffix_p = [init_layer(keys[i], cfg, i) for i in suffix]
+    return {"prefix": prefix_p, "body": body_p, "suffix": suffix_p}
+
+
+def apply_stack(params, x, cos, sin, cfg: ModelConfig):
+    """Full-sequence forward through all layers.  Returns (x, aux_sum)."""
+    pre, scanned, suffix = stack_plan(cfg)
+    kinds = cfg.layer_kinds
+    aux_total = jnp.zeros((), jnp.float32)
+    for i in pre:
+        x, aux = apply_layer(params["prefix"][i], x, cos, sin, cfg, i, kinds[i])
+        aux_total += aux
+    n_periods = len(scanned[0]) if scanned and scanned[0] else 0
+    if n_periods:
+        body_kinds = [kinds[scanned[j][0]] for j in range(cfg.period)]
+        rep_idx = scanned[-1][0]  # representative index for the moe switch
+
+        def _super_block(slice_p, x, aux):
+            for j in range(cfg.period):
+                x, a = apply_layer(
+                    slice_p[j], x, cos, sin, cfg, rep_idx, body_kinds[j]
+                )
+                aux += a
+            return x, aux
+
+        if cfg.remat:  # trade recompute for activation HBM in the backward
+            _super_block = jax.checkpoint(_super_block)
+
+        def scan_fn(carry, slice_p):
+            x, aux = carry
+            x, aux = _super_block(slice_p, x, aux)
+            return (x, aux), None
+
+        xs = tuple(params["body"][j] for j in range(cfg.period))
+        if cfg.scan_layers:
+            (x, aux_total), _ = jax.lax.scan(scan_fn, (x, aux_total), xs)
+        else:  # unrolled: truthful cost_analysis (roofline mode)
+            for i in range(n_periods):
+                slice_p = jax.tree.map(lambda a: a[i], xs)
+                (x, aux_total), _ = scan_fn((x, aux_total), slice_p)
+    for n_, i in enumerate(suffix):
+        x, aux = apply_layer(params["suffix"][n_], x, cos, sin, cfg, i, kinds[i])
+        aux_total += aux
+    return x, aux_total
+
+
+def decode_stack(params, caches, x, cos, sin, cfg: ModelConfig, pos):
+    """One-token decode through all layers.  Returns (x, caches)."""
+    pre, scanned, suffix = stack_plan(cfg)
+    kinds = cfg.layer_kinds
+    new_prefix = []
+    for i in pre:
+        x, c = decode_layer(
+            params["prefix"][i], x, cos, sin, cfg, i, kinds[i],
+            caches["prefix"][i], pos,
+        )
+        new_prefix.append(c)
+    n_periods = len(scanned[0]) if scanned and scanned[0] else 0
+    new_body = caches["body"]
+    if n_periods:
+        body_kinds = [kinds[scanned[j][0]] for j in range(cfg.period)]
+        rep_idx = scanned[-1][0]
+
+        def scan_fn(x, slices):
+            slice_p, slice_c = slices
+            new_c = []
+            for j in range(cfg.period):
+                x, c = decode_layer(
+                    slice_p[j], x, cos, sin, cfg, rep_idx, body_kinds[j],
+                    slice_c[j], pos,
+                )
+                new_c.append(c)
+            return x, tuple(new_c)
+
+        xs = (tuple(params["body"]), tuple(caches["body"]))
+        if cfg.scan_layers:
+            x, new_body = jax.lax.scan(scan_fn, x, xs)
+            new_body = list(new_body)
+        else:
+            outs = []
+            for i in range(n_periods):
+                sl = jax.tree.map(lambda a: a[i], xs)
+                x, c = scan_fn(x, sl)
+                outs.append(c)
+            new_body = list(jax.tree.map(lambda *cs: jnp.stack(cs), *outs))
+    new_suffix = []
+    for n_, i in enumerate(suffix):
+        x, c = decode_layer(
+            params["suffix"][n_], x, cos, sin, cfg, i, kinds[i],
+            caches["suffix"][n_], pos,
+        )
+        new_suffix.append(c)
+    return x, {"prefix": new_prefix, "body": new_body, "suffix": new_suffix}
+
+
+def init_caches(cfg: ModelConfig, batch: int, seq: int, dtype):
+    pre, scanned, suffix = stack_plan(cfg)
+    kinds = cfg.layer_kinds
+    prefix_c = [
+        init_layer_cache(cfg, i, kinds[i], batch, seq, dtype) for i in pre
+    ]
+    body_c = []
+    for j, ids in enumerate(scanned):
+        body_c.append(
+            _stack(
+                [init_layer_cache(cfg, i, kinds[i], batch, seq, dtype) for i in ids]
+            )
+            if ids
+            else {}
+        )
+    suffix_c = [
+        init_layer_cache(cfg, i, kinds[i], batch, seq, dtype) for i in suffix
+    ]
+    return {"prefix": prefix_c, "body": body_c, "suffix": suffix_c}

@@ -1,0 +1,68 @@
+"""AdamW with decoupled weight decay and global-norm clipping (pure JAX).
+
+Moment states are f32 regardless of (possibly bf16) param dtype; the update
+math runs in f32 and casts back — the standard mixed-precision recipe.  The
+optimizer state pytree mirrors the params pytree, so pjit shards it with the
+same rules (ZeRO-style: FSDP-sharded params imply FSDP-sharded moments).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(grads))
+    )
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gnorm
+
+
+def adamw_update(
+    params,
+    grads,
+    state,
+    lr,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    max_grad_norm: float = 1.0,
+):
+    """Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    count = state["count"] + 1
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g32 = g.astype(jnp.float32)
+        mu = b1 * mu + (1 - b1) * g32
+        nu = b2 * nu + (1 - b2) * g32 * g32
+        step = (mu / c1) / (jnp.sqrt(nu / c2) + eps)
+        p32 = p.astype(jnp.float32)
+        p32 = p32 - lr * (step + weight_decay * p32)
+        return p32.astype(p.dtype), mu, nu
+
+    out = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+    flat, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+    new_p = jax.tree.unflatten(treedef, [t[0] for t in flat])
+    new_mu = jax.tree.unflatten(treedef, [t[1] for t in flat])
+    new_nu = jax.tree.unflatten(treedef, [t[2] for t in flat])
+    return (
+        new_p,
+        {"mu": new_mu, "nu": new_nu, "count": count},
+        {"grad_norm": gnorm},
+    )

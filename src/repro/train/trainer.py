@@ -1,0 +1,168 @@
+"""Fault-tolerant training loop.
+
+Failure posture (the parts a 1000-node run needs from the framework side):
+  * checkpoint/restart — atomic publish + elastic restore (checkpoint.py);
+    the data stream is a pure function of the step, so restarts are exact;
+  * NaN/inf guard — a bad step is *skipped* (params/opt state untouched) and
+    counted; persistent NaNs (>patience) raise instead of silently burning
+    accelerator-hours;
+  * preemption hook — SIGTERM triggers a final checkpoint before exit, which
+    is what makes spot/preemptible fleets and hot-spare pod swaps workable;
+  * straggler posture — steps are synchronous SPMD (no per-host work
+    stealing on TPU); mitigation is restart-from-checkpoint on a respawned
+    slice, which the above makes cheap.  Documented in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import loss_fn
+from repro.models.common import ModelConfig
+from repro.optim import adamw_update, cosine_schedule
+
+from . import checkpoint as ckpt
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    max_grad_norm: float = 1.0
+    checkpoint_every: int = 200
+    checkpoint_dir: Optional[str] = None
+    keep_last: int = 3
+    nan_patience: int = 10
+    log_every: int = 10
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig) -> Callable:
+    """Pure (params, opt_state, step, batch) -> (params, opt_state, metrics).
+
+    This is the function the launcher jits/pjits; sharding is decided by the
+    caller via in/out_shardings (see launch.dryrun / launch.train).
+    """
+
+    def train_step(params, opt_state, step, batch):
+        def scalar_loss(p):
+            loss, metrics = loss_fn(p, cfg, batch)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(scalar_loss, has_aux=True)(
+            params
+        )
+        lr = cosine_schedule(
+            step,
+            peak_lr=tcfg.peak_lr,
+            warmup_steps=tcfg.warmup_steps,
+            total_steps=tcfg.total_steps,
+        )
+        new_params, new_opt, opt_metrics = adamw_update(
+            params,
+            grads,
+            opt_state,
+            lr,
+            weight_decay=tcfg.weight_decay,
+            max_grad_norm=tcfg.max_grad_norm,
+        )
+        # NaN guard: keep old state when the step went bad
+        bad = ~jnp.isfinite(loss)
+        keep = lambda new, old: jax.tree.map(
+            lambda n, o: jnp.where(bad, o, n), new, old
+        )
+        new_params = keep(new_params, params)
+        new_opt = keep(new_opt, opt_state)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        metrics["lr"] = lr
+        metrics["bad_step"] = bad.astype(jnp.int32)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainConfig, params, opt_state,
+                 stream, train_step_fn):
+        self.cfg, self.tcfg = cfg, tcfg
+        self.params, self.opt_state = params, opt_state
+        self.stream = stream
+        self.train_step_fn = train_step_fn
+        self.step = 0
+        self.bad_streak = 0
+        self.history = []
+        self._preempted = False
+
+    # --- fault tolerance hooks -------------------------------------------
+    def install_preemption_hook(self):
+        def handler(signum, frame):
+            self._preempted = True
+
+        signal.signal(signal.SIGTERM, handler)
+
+    def maybe_restore(self):
+        d = self.tcfg.checkpoint_dir
+        if not d:
+            return False
+        latest = ckpt.latest_step(d)
+        if latest is None:
+            return False
+        state, _ = ckpt.restore_checkpoint(
+            d, latest, {"params": self.params, "opt": self.opt_state}
+        )
+        self.params, self.opt_state = state["params"], state["opt"]
+        self.step = latest
+        return True
+
+    def save(self):
+        if self.tcfg.checkpoint_dir:
+            ckpt.save_checkpoint(
+                self.tcfg.checkpoint_dir,
+                self.step,
+                {"params": self.params, "opt": self.opt_state},
+                meta={"arch": self.cfg.name},
+                keep_last=self.tcfg.keep_last,
+            )
+
+    # --- loop --------------------------------------------------------------
+    def run(self, n_steps: int, log=print):
+        t0 = time.perf_counter()
+        for _ in range(n_steps):
+            batch = self.stream.batch_at(self.step)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            self.params, self.opt_state, metrics = self.train_step_fn(
+                self.params, self.opt_state, jnp.asarray(self.step), batch
+            )
+            bad = int(metrics["bad_step"])
+            self.bad_streak = self.bad_streak + 1 if bad else 0
+            if self.bad_streak > self.tcfg.nan_patience:
+                raise RuntimeError(
+                    f"{self.bad_streak} consecutive non-finite steps at {self.step}"
+                )
+            self.history.append(float(metrics["loss"]))
+            if self.step % self.tcfg.log_every == 0:
+                log(
+                    f"step {self.step:6d} loss {float(metrics['loss']):8.4f} "
+                    f"lr {float(metrics['lr']):.2e} gnorm {float(metrics['grad_norm']):.2f} "
+                    f"({(time.perf_counter()-t0):.1f}s)"
+                )
+            self.step += 1
+            if (
+                self.step % self.tcfg.checkpoint_every == 0
+                or self._preempted
+            ):
+                self.save()
+                if self._preempted:
+                    log(f"preempted at step {self.step}; checkpoint saved")
+                    return self.history
+        return self.history

@@ -1,0 +1,126 @@
+"""Launch-layer units: input-spec cells, collective-bytes HLO parsing,
+roofline math, arch applicability — all cheap (no 512-device meshes here;
+the real dry-run is exercised by launch/dryrun.py, results in results/)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.launch import analysis
+from repro.launch.shapes import CELLS, cell_applicable, input_specs, params_specs
+
+
+def test_cells_cover_assignment():
+    assert set(CELLS) == {"train_4k", "prefill_32k", "decode_32k", "long_500k"}
+    assert CELLS["train_4k"].global_batch == 256
+    assert CELLS["long_500k"].seq_len == 524288 and CELLS["long_500k"].global_batch == 1
+
+
+def test_all_40_cells_accounted():
+    """10 archs x 4 shapes: every cell is either applicable or has a reason."""
+    n_ok = n_skip = 0
+    for name, cfg in ARCHS.items():
+        for cell in CELLS.values():
+            ok, reason = cell_applicable(cfg, cell)
+            if ok:
+                n_ok += 1
+            else:
+                n_skip += 1
+                assert reason
+    assert n_ok + n_skip == 40
+    assert n_skip == 7  # long_500k on pure full-attention archs
+
+
+def test_input_specs_no_allocation_and_shapes():
+    cfg = get_config("qwen3-0.6b")
+    spec = input_specs(cfg, CELLS["train_4k"])
+    assert isinstance(spec["tokens"], jax.ShapeDtypeStruct)
+    assert spec["tokens"].shape == (256, 4096)
+    dec = input_specs(cfg, CELLS["decode_32k"])
+    assert dec["token"].shape == (128, 1)
+    leaves = jax.tree.leaves(dec["caches"])
+    assert all(isinstance(x, jax.ShapeDtypeStruct) for x in leaves)
+
+
+def test_prefix_archs_carve_sequence_budget():
+    cfg = get_config("internvl2-26b")
+    spec = input_specs(cfg, CELLS["train_4k"])
+    s_tok = spec["tokens"].shape[1]
+    s_pre = spec["prefix_embeds"].shape[1]
+    assert s_tok + s_pre == 4096
+    assert spec["prefix_embeds"].shape[2] == cfg.d_model
+
+
+def test_params_specs_match_init_shapes():
+    from repro.configs import smoke_config
+    from repro.models import init_params
+
+    cfg = smoke_config(get_config("smollm-135m"))
+    sds = params_specs(cfg)
+    real = init_params(jax.random.PRNGKey(0), cfg)
+    for a, b in zip(jax.tree.leaves(sds), jax.tree.leaves(real)):
+        assert tuple(a.shape) == tuple(b.shape)
+        assert a.dtype == b.dtype
+
+
+# ------------------------------------------------------- collective parse
+
+
+def test_collective_bytes_parsing():
+    hlo = """
+  %ag = bf16[16,2048]{1,0} all-gather(bf16[1,2048]{1,0} %x), replica_groups=...
+  %ar = f32[512]{0} all-reduce(f32[512]{0} %y), to_apply=%sum
+  %rs = f32[32,4]{1,0} reduce-scatter(f32[256,4]{1,0} %z)
+  %cp = u8[100]{0} collective-permute(u8[100]{0} %w)
+  %t = (f32[8,4]{1,0}, f32[8,4]{1,0}) all-reduce(f32[8,4] %a, f32[8,4] %b)
+  %not_a_collective = f32[4]{0} add(f32[4]{0} %p, f32[4]{0} %q)
+"""
+    out = analysis.collective_bytes(hlo)
+    assert out["bytes"]["all-gather"] == 16 * 2048 * 2
+    assert out["bytes"]["all-reduce"] == 512 * 4 + 2 * 8 * 4 * 4
+    assert out["bytes"]["reduce-scatter"] == 32 * 4 * 4
+    assert out["bytes"]["collective-permute"] == 100
+    assert out["counts"]["all-reduce"] == 2
+    assert out["total_bytes"] == sum(out["bytes"].values())
+
+
+def test_roofline_terms_and_dominance():
+    r = analysis.roofline({"flops": 197e12, "bytes accessed": 819e9}, 50e9, 256)
+    assert abs(r["compute_s"] - 1.0) < 1e-6
+    assert abs(r["memory_s"] - 1.0) < 1e-6
+    assert abs(r["collective_s"] - 1.0) < 1e-6
+    r2 = analysis.roofline({"flops": 1, "bytes accessed": 1}, 50e9 * 10, 256)
+    assert r2["dominant"] == "collective_s"
+
+
+def test_model_flops_moe_discounts_unrouted_experts():
+    dense = get_config("deepseek-coder-33b")
+    moe = get_config("deepseek-v2-lite-16b")
+    assert analysis.active_params(dense) == dense.param_count()
+    act = analysis.active_params(moe)
+    assert act < moe.param_count() * 0.35  # 6+2 of 66 experts active
+    cell = CELLS["train_4k"]
+    assert analysis.model_flops(moe, cell) == pytest.approx(
+        6.0 * act * 256 * 4096
+    )
+
+
+def test_model_memory_lb_sane():
+    cfg = get_config("deepseek-coder-33b")
+    lb_train = analysis.model_memory_bytes(cfg, CELLS["train_4k"], 256)
+    lb_decode = analysis.model_memory_bytes(cfg, CELLS["decode_32k"], 256)
+    # train streams params+grads+moments; decode streams params+KV once
+    assert lb_train > cfg.param_count() / 256 * 10
+    kv = 62 * 128 * 32768 * 2 * 8 * 128 * 2 / 256
+    assert lb_decode == pytest.approx(
+        analysis.active_params(cfg) / 256 * 2 + kv, rel=0.01
+    )
+
+
+def test_mesh_factories_are_lazy():
+    # importing launch.mesh must not initialize devices — the factory is a fn
+    import repro.launch.mesh as m
+
+    assert callable(m.make_production_mesh)

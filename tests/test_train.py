@@ -1,0 +1,243 @@
+"""Training substrate: optimizer math, checkpoint round-trips (incl. elastic
+restore + atomicity), NaN-guard, data determinism, grad compression, and a
+short end-to-end training run whose loss actually drops."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_config
+from repro.data import DataConfig, SyntheticLMStream
+from repro.models import init_params
+from repro.optim import (
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    compress_grads_ef,
+    cosine_schedule,
+)
+from repro.optim.compression import init_compression
+from repro.train import (
+    TrainConfig,
+    Trainer,
+    latest_step,
+    make_train_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ------------------------------------------------------------- optimizer
+
+
+def test_adamw_minimizes_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = adamw_init(params)
+    for _ in range(300):
+        grads = {"w": 2 * params["w"]}
+        params, state, m = adamw_update(
+            params, grads, state, 0.05, weight_decay=0.0
+        )
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.full((4,), 10.0), "b": jnp.full((9,), 10.0)}
+    clipped, gnorm = clip_by_global_norm(grads, 1.0)
+    total = jnp.sqrt(sum(jnp.sum(g**2) for g in jax.tree.leaves(clipped)))
+    np.testing.assert_allclose(float(total), 1.0, rtol=1e-5)
+    np.testing.assert_allclose(float(gnorm), np.sqrt(13 * 100), rtol=1e-5)
+
+
+def test_cosine_schedule_shape():
+    lrs = [float(cosine_schedule(s, peak_lr=1.0, warmup_steps=10, total_steps=100))
+           for s in range(100)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[10] - 1.0) < 1e-6
+    assert lrs[99] < 0.2 and lrs[99] >= 0.1 - 1e-6  # min_ratio floor
+    assert all(b <= a + 1e-9 for a, b in zip(lrs[10:], lrs[11:]))  # monotone decay
+
+
+def test_bf16_params_f32_moments():
+    params = {"w": jnp.ones((8,), jnp.bfloat16)}
+    st = adamw_init(params)
+    assert st["mu"]["w"].dtype == jnp.float32
+    p2, st2, _ = adamw_update(params, {"w": jnp.ones((8,), jnp.bfloat16)}, st, 1e-2)
+    assert p2["w"].dtype == jnp.bfloat16
+    assert int(st2["count"]) == 1
+
+
+# ------------------------------------------------------------ compression
+
+
+def test_grad_compression_error_feedback_unbiased():
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.normal(size=(64,)), jnp.float32)}
+    state = init_compression(g)
+    acc = np.zeros(64)
+    for _ in range(50):
+        deq, state = compress_grads_ef(g, state)
+        acc += np.asarray(deq["w"])
+    # long-run average of EF-compressed grads converges to the true grad
+    np.testing.assert_allclose(acc / 50, np.asarray(g["w"]), atol=0.02)
+
+
+def test_grad_compression_int8_range():
+    from repro.optim.compression import _quantize
+
+    x = jnp.asarray([-3.0, 0.0, 7.0])
+    q, scale = _quantize(x)
+    assert q.dtype == jnp.int8
+    np.testing.assert_allclose(
+        np.asarray(q, np.float32) * float(scale), np.asarray(x), atol=float(scale)
+    )
+
+
+# ------------------------------------------------------------- checkpoint
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    state = {
+        "params": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3)},
+        "opt": {"mu": {"w": jnp.ones((2, 3))}, "count": jnp.asarray(7)},
+    }
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 42, state)
+    assert latest_step(d) == 42
+    restored, manifest = restore_checkpoint(d, 42, state)
+    assert manifest["step"] == 42
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_retention_and_atomicity(tmp_path):
+    d = str(tmp_path / "ckpt")
+    state = {"w": jnp.zeros((4,))}
+    for s in [1, 2, 3, 4, 5]:
+        save_checkpoint(d, s, state, keep_last=2)
+    kept = sorted(x for x in os.listdir(d) if x.startswith("step_"))
+    assert kept == ["step_00000004", "step_00000005"]
+    assert not any(x.endswith(".tmp") for x in os.listdir(d))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 1, {"w": jnp.zeros((4,))})
+    with pytest.raises(ValueError):
+        restore_checkpoint(d, 1, {"w": jnp.zeros((5,))})
+
+
+def test_checkpoint_elastic_restore_to_new_sharding(tmp_path):
+    """Restore onto an explicit (different) sharding — the elastic path."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    d = str(tmp_path / "ckpt")
+    state = {"w": jnp.arange(8, dtype=jnp.float32)}
+    save_checkpoint(d, 1, state)
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = {"w": NamedSharding(mesh, P("data"))}
+    restored, _ = restore_checkpoint(d, 1, state, shardings=sh)
+    assert restored["w"].sharding == sh["w"]
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.arange(8))
+
+
+# ------------------------------------------------------------------ data
+
+
+def test_data_pure_function_of_step():
+    cfg = DataConfig(vocab_size=97, seq_len=16, global_batch=4)
+    s1 = SyntheticLMStream(cfg)
+    s2 = SyntheticLMStream(cfg)
+    b1, b2 = s1.batch_at(7), s2.batch_at(7)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(b1["tokens"], s1.batch_at(8)["tokens"])
+
+
+def test_data_host_sharding_partitions_global_batch():
+    cfg = DataConfig(vocab_size=97, seq_len=8, global_batch=8)
+    full = SyntheticLMStream(cfg).batch_at(3)["tokens"]
+    parts = [
+        SyntheticLMStream(cfg, shard_index=i, shard_count=4).batch_at(3)["tokens"]
+        for i in range(4)
+    ]
+    np.testing.assert_array_equal(np.concatenate(parts), full)
+
+
+def test_labels_are_shifted_tokens():
+    cfg = DataConfig(vocab_size=97, seq_len=16, global_batch=2)
+    b = SyntheticLMStream(cfg).batch_at(0)
+    # labels[i] is the next token after tokens[i] by construction
+    assert b["tokens"].shape == b["labels"].shape == (2, 16)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+# --------------------------------------------------------------- trainer
+
+
+def _tiny_setup(tmp_path=None, total=60):
+    cfg = smoke_config(get_config("smollm-135m"))
+    tcfg = TrainConfig(
+        peak_lr=3e-3,
+        warmup_steps=5,
+        total_steps=total,
+        checkpoint_every=20,
+        checkpoint_dir=str(tmp_path / "ck") if tmp_path else None,
+        log_every=1000,
+    )
+    params = init_params(KEY, cfg)
+    opt = adamw_init(params)
+    stream = SyntheticLMStream(
+        DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=4)
+    )
+    step_fn = jax.jit(make_train_step(cfg, tcfg))
+    return cfg, tcfg, params, opt, stream, step_fn
+
+
+def test_training_loss_decreases():
+    cfg, tcfg, params, opt, stream, step_fn = _tiny_setup(total=60)
+    tr = Trainer(cfg, tcfg, params, opt, stream, step_fn)
+    hist = tr.run(60, log=lambda *_: None)
+    first, last = np.mean(hist[:10]), np.mean(hist[-10:])
+    assert last < first - 0.2, (first, last)
+
+
+def test_trainer_checkpoint_restart_is_exact(tmp_path):
+    cfg, tcfg, params, opt, stream, step_fn = _tiny_setup(tmp_path, total=40)
+    tr = Trainer(cfg, tcfg, params, opt, stream, step_fn)
+    tr.run(25, log=lambda *_: None)  # checkpoints at step 20
+    expected_tail = tr.history[20:25]  # losses for steps 20..24
+
+    # fresh trainer restores from step 20 and replays 20..24 identically
+    cfg2, tcfg2, params2, opt2, stream2, step_fn2 = _tiny_setup(tmp_path, total=40)
+    tr2 = Trainer(cfg2, tcfg2, params2, opt2, stream2, step_fn2)
+    assert tr2.maybe_restore() and tr2.step == 20
+    tail2 = tr2.run(5, log=lambda *_: None)
+    np.testing.assert_allclose(expected_tail, tail2, rtol=1e-4, atol=1e-5)
+
+
+def test_nan_guard_skips_bad_step():
+    cfg, tcfg, params, opt, stream, step_fn = _tiny_setup(total=10)
+    tr = Trainer(cfg, tcfg, params, opt, stream, step_fn)
+    tr.run(2, log=lambda *_: None)
+    w_before = np.asarray(jax.tree.leaves(tr.params)[0]).copy()
+
+    # poison one batch -> non-finite loss; params must be untouched
+    class Poison:
+        def batch_at(self, step):
+            b = stream.batch_at(step)
+            return {
+                "tokens": b["tokens"],
+                "labels": b["labels"],
+                "prefix_embeds": np.full((4, 1, cfg.d_model), np.nan, np.float32),
+            }
+
+    tr.stream = Poison()
+    tr.run(1, log=lambda *_: None)
+    w_after = np.asarray(jax.tree.leaves(tr.params)[0])
+    np.testing.assert_array_equal(w_before, w_after)
+    assert tr.bad_streak == 1
