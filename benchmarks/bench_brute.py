@@ -1,19 +1,18 @@
 """Paper Fig. 4: TrueKNN vs the non-RT (cuML-style) brute-force kNN, k=5."""
 
-import jax
+from repro.api import build_index
+from repro.core import make_dataset
 
-from repro.core import brute_knn, make_dataset, trueknn
-
-from .common import emit, timed
+from .common import cold_trueknn, emit, timed
 
 
 def main():
     for name in ["road", "porto", "iono", "kitti"]:
         for n in [8_000, 16_000]:
             pts = make_dataset(name, n, seed=1)
-            res, t_true = timed(lambda: trueknn(pts, 5))
-            # block_until_ready: brute returns async jnp futures
-            _, t_brute = timed(lambda: jax.block_until_ready(brute_knn(pts, 5)))
+            res, t_true = timed(lambda: cold_trueknn(pts, 5))
+            oracle = build_index(pts, backend="brute")
+            _, t_brute = timed(lambda: oracle.query(None, 5))
             emit(
                 f"vs_brute/{name}/n={n}",
                 t_true * 1e6,

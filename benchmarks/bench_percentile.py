@@ -5,14 +5,10 @@ still wins; (c) full TrueKNN can beat the 99th-pct baseline outright."""
 
 import numpy as np
 
-from repro.core import (
-    fixed_radius_knn,
-    make_dataset,
-    percentile_knn_distance,
-    trueknn,
-)
+from repro.api import build_index
+from repro.core import make_dataset, percentile_knn_distance
 
-from .common import emit, timed
+from .common import cold_trueknn, emit, timed
 
 
 def main():
@@ -22,10 +18,12 @@ def main():
         k = int(np.sqrt(n))
         r99 = percentile_knn_distance(pts, k, 99.0)
         # 99th-pct-terminated TrueKNN vs 99th-pct-radius baseline
-        res99, t99 = timed(lambda: trueknn(pts, k, stop_radius=r99))
-        (_, _, _, btests), t_b99 = timed(lambda: fixed_radius_knn(pts, r99, k))
+        res99, t99 = timed(lambda: cold_trueknn(pts, k, stop_radius=r99))
+        base99 = build_index(pts, backend="fixed_radius", radius=r99)
+        b_res, t_b99 = timed(lambda: base99.query(None, k))
+        btests = b_res.n_tests
         # full (unbounded) TrueKNN
-        resf, tf = timed(lambda: trueknn(pts, k))
+        resf, tf = timed(lambda: cold_trueknn(pts, k))
         emit(
             f"pct99/{name}",
             t99 * 1e6,

@@ -2,14 +2,14 @@
 dataset.  Claim validated: queries drain geometrically while late (large
 radius) rounds with a handful of outlier queries still cost real time."""
 
-from repro.core import make_dataset, trueknn
+from repro.core import make_dataset
 
-from .common import emit, timed
+from .common import cold_trueknn, emit, timed
 
 
 def main():
     pts = make_dataset("road", 20_000, seed=1)
-    res, _ = timed(lambda: trueknn(pts, 5))
+    res, _ = timed(lambda: cold_trueknn(pts, 5))
     for r in res.rounds:
         emit(
             f"rounds/road/round={r.round_idx}",

@@ -1,9 +1,9 @@
 """Paper Fig. 7 + Sec 5.4.2: execution time is insensitive to the sampled
 start radius across a 16x range; far-too-large radii hurt."""
 
-from repro.core import make_dataset, sample_start_radius, trueknn
+from repro.core import make_dataset, sample_start_radius
 
-from .common import emit, timed
+from .common import cold_trueknn, emit, timed
 
 
 def main():
@@ -11,7 +11,7 @@ def main():
     r0 = sample_start_radius(pts, seed=0)
     times = {}
     for mult in [0.25, 0.5, 1.0, 2.0, 4.0]:
-        res, t = timed(lambda m=mult: trueknn(pts, 5, start_radius=r0 * m))
+        res, t = timed(lambda m=mult: cold_trueknn(pts, 5, start_radius=r0 * m))
         times[mult] = t
         emit(
             f"start_radius/x{mult}",

@@ -8,6 +8,7 @@ the 512-device XLA flag and its own process).
 
 from __future__ import annotations
 
+import json
 import time
 
 
@@ -19,6 +20,7 @@ def main() -> None:
     from . import (
         bench_brute,
         bench_dataset_size,
+        bench_index_reuse,
         bench_k,
         bench_kernel,
         bench_percentile,
@@ -42,6 +44,11 @@ def main() -> None:
     bench_start_radius.main()
     _section("paper Fig8/9+T3: 99th percentile / outliers")
     bench_percentile.main()
+    _section("index reuse (build-once/query-many serving)")
+    index_summary = bench_index_reuse.main()
+    with open("BENCH_index.json", "w") as f:
+        json.dump(index_summary, f, indent=2, default=str)
+    print("# wrote BENCH_index.json", flush=True)
     _section("kernel microbench")
     bench_kernel.main()
     print(f"# total {time.time()-t0:.1f}s", flush=True)

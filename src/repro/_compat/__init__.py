@@ -1,0 +1,7 @@
+"""Compatibility shims for optional third-party dependencies.
+
+The container pins its package set; anything absent is stubbed here with a
+deterministic, dependency-free replacement so the test suite and tooling run
+unchanged.  Each stub implements exactly the API surface the repo uses —
+nothing speculative.
+"""

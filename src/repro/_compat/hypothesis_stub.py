@@ -1,0 +1,116 @@
+"""Deterministic stand-in for the ``hypothesis`` property-testing library.
+
+Used only when the real ``hypothesis`` is not installed (tests/conftest.py
+registers this module under ``sys.modules['hypothesis']``).  It implements
+the subset the test suite uses — ``given`` with keyword strategies,
+``settings(max_examples=..., deadline=...)`` and the ``integers`` /
+``floats`` / ``sampled_from`` / ``booleans`` strategies — by drawing
+``max_examples`` pseudo-random examples from a seed derived from the test
+name, so runs are reproducible and CI-stable.  No shrinking, no database:
+on failure the raised AssertionError reports the drawn example inline.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+__all__ = ["given", "settings", "strategies"]
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    """A strategy is just a draw function rng -> value."""
+
+    def __init__(self, draw, desc: str):
+        self._draw = draw
+        self.desc = desc
+
+    def draw(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+    def __repr__(self):
+        return f"_Strategy({self.desc})"
+
+
+def _integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(
+        lambda rng: int(rng.integers(min_value, max_value + 1)),
+        f"integers({min_value}, {max_value})",
+    )
+
+
+def _floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+    # log-uniform when the range spans decades and is positive — matches how
+    # the suite uses floats (scales); plain uniform otherwise.
+    if min_value > 0 and max_value / min_value > 1e3:
+        lo, hi = np.log(min_value), np.log(max_value)
+        return _Strategy(
+            lambda rng: float(np.exp(rng.uniform(lo, hi))),
+            f"floats({min_value}, {max_value}, log)",
+        )
+    return _Strategy(
+        lambda rng: float(rng.uniform(min_value, max_value)),
+        f"floats({min_value}, {max_value})",
+    )
+
+
+def _sampled_from(elements) -> _Strategy:
+    seq = list(elements)
+    return _Strategy(
+        lambda rng: seq[int(rng.integers(0, len(seq)))],
+        f"sampled_from({seq!r})",
+    )
+
+
+def _booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.integers(0, 2)), "booleans()")
+
+
+class strategies:  # mimics the ``hypothesis.strategies`` module surface
+    integers = staticmethod(_integers)
+    floats = staticmethod(_floats)
+    sampled_from = staticmethod(_sampled_from)
+    booleans = staticmethod(_booleans)
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    """Records max_examples on the (possibly already ``given``-wrapped)
+    function; order relative to ``given`` doesn't matter because
+    ``functools.wraps`` propagates the attribute."""
+
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strategy_kwargs):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n_examples = getattr(wrapper, "_stub_max_examples", _DEFAULT_MAX_EXAMPLES)
+            base_seed = zlib.crc32(fn.__qualname__.encode())
+            for i in range(n_examples):
+                rng = np.random.default_rng((base_seed + i) & 0xFFFFFFFF)
+                drawn = {k: s.draw(rng) for k, s in strategy_kwargs.items()}
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except Exception as e:  # re-raise with the example attached
+                    raise AssertionError(
+                        f"falsifying example (stub hypothesis, run {i}): {drawn}"
+                    ) from e
+
+        # pytest resolves fixtures from inspect.signature, which follows
+        # __wrapped__ back to the parametrized original — hide it so the
+        # drawn kwargs aren't mistaken for fixtures.
+        wrapper.__dict__.pop("__wrapped__", None)
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+
+    return deco

@@ -1,0 +1,49 @@
+"""Unified neighbor-search API: build once, query many.
+
+The paper's workload shape — structure resident, queries stream in, the
+search space grows until every query resolves — maps to two calls::
+
+    from repro.api import build_index
+
+    index = build_index(points, backend="trueknn")   # build (resident)
+    res = index.query(batch_a, k=8)                   # KNNResult
+    res = index.query(batch_b, k=8)                   # reuses cached grids,
+                                                      # warm-starts the radius
+
+Every backend returns the same ``KNNResult`` (dists, idxs, n_tests, rounds,
+timings), and backends are registered by name so new engines plug in
+without touching call sites::
+
+    @register_backend("my_engine")
+    class MyIndex(NeighborIndex):
+        def query(self, queries, k, *, radius=None, stop_radius=None): ...
+
+Migration from the pre-index free functions (kept as deprecated shims):
+
+    trueknn(pts, k, ...)            -> build_index(pts).query(None, k, ...)
+    trueknn(pts, k, queries=q)      -> build_index(pts).query(q, k)
+    fixed_radius_knn(pts, r, k)     -> build_index(pts, backend="fixed_radius",
+                                                   radius=r).query(None, k)
+    brute_knn(pts, k, queries=q)    -> build_index(pts, backend="brute").query(q, k)
+
+The shims rebuild state per call; hold an index instead wherever more than
+one batch is served (see examples/serve_knn.py and
+benchmarks/bench_index_reuse.py for the measured difference).
+"""
+
+from repro.core.result import KNNResult, RoundStats
+
+from . import backends  # registers the built-in backends
+from .index import NeighborIndex, build_index
+from .registry import available_backends, get_backend, register_backend
+
+__all__ = [
+    "KNNResult",
+    "RoundStats",
+    "NeighborIndex",
+    "build_index",
+    "available_backends",
+    "get_backend",
+    "register_backend",
+    "backends",
+]

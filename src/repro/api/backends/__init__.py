@@ -1,0 +1,25 @@
+"""Built-in ``NeighborIndex`` backends.
+
+Importing this package registers every built-in backend with the registry:
+
+  brute         exact chunked dense distances (the oracle)
+  fixed_radius  one grid round within an exact radius ball (paper Alg. 1)
+  trueknn       multi-round unbounded search with grid cache + warm start
+                (paper Alg. 3; the serving default)
+  distributed   mesh-sharded multi-round search (hypercube top-k merge)
+
+Third-party backends register the same way — decorate a ``NeighborIndex``
+subclass with ``@register_backend("name")`` and import the module.
+"""
+
+from .brute import BruteIndex
+from .distributed import DistributedIndex
+from .fixed_radius import FixedRadiusIndex
+from .trueknn import TrueKNNIndex
+
+__all__ = [
+    "BruteIndex",
+    "DistributedIndex",
+    "FixedRadiusIndex",
+    "TrueKNNIndex",
+]

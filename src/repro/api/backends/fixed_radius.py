@@ -1,0 +1,118 @@
+"""Fixed-radius backend (paper Alg. 1) — ``backend="fixed_radius"``.
+
+Build-once matters here: the hash grid for a given radius is built on first
+use and cached on the index, so serving many batches at the same radius
+pays binning exactly once (the free-function ``fixed_radius_knn`` rebuilt
+it every call).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fixed_radius import fixed_radius_round
+from repro.core.grid import build_grid
+from repro.core.result import KNNResult, RoundStats
+
+from ..index import NeighborIndex
+from ..registry import register_backend
+
+__all__ = ["FixedRadiusIndex"]
+
+
+@register_backend("fixed_radius")
+class FixedRadiusIndex(NeighborIndex):
+    """Single-round search within an exact radius ball.
+
+    cfg: ``radius`` (default search radius; ``query(radius=...)`` overrides
+    per call), ``chunk`` (query tile, default 2048), ``max_cached_grids``
+    (LRU bound on per-radius grids so per-request radii can't grow device
+    memory without limit; default 16).
+    """
+
+    def __init__(self, points, *, radius: Optional[float] = None,
+                 chunk: int = 2048, max_cached_grids: int = 16):
+        super().__init__(points)
+        self._default_radius = radius
+        self._chunk = int(chunk)
+        self._max_cached_grids = max(1, int(max_cached_grids))
+        self._pts_j = jnp.asarray(self._pts)
+        self._grids: dict = {}  # radius -> Grid (insertion-ordered LRU)
+        self._grid_builds = 0
+        self._grid_cache_hits = 0
+
+    def _grid_for(self, radius: float):
+        key = float(radius)
+        g = self._grids.pop(key, None)
+        if g is not None:
+            self._grids[key] = g  # refresh recency
+            self._grid_cache_hits += 1
+            return g, True
+        g = build_grid(self._pts, radius)
+        self._grids[key] = g
+        self._grid_builds += 1
+        while len(self._grids) > self._max_cached_grids:
+            self._grids.pop(next(iter(self._grids)))
+        return g, False
+
+    def query(
+        self,
+        queries,
+        k: int,
+        *,
+        radius: Optional[float] = None,
+        stop_radius: Optional[float] = None,
+    ) -> KNNResult:
+        if stop_radius is not None:
+            raise ValueError("fixed_radius backend searches one radius; "
+                             "use backend='trueknn' for stop_radius")
+        r = radius if radius is not None else self._default_radius
+        if r is None:
+            raise ValueError("fixed_radius backend needs a radius — pass "
+                             "build_index(..., radius=r) or query(radius=r)")
+        r = float(r)
+        t0 = time.perf_counter()
+        if queries is None:
+            q = self._pts
+            qid = np.arange(self.n_points, dtype=np.int32)
+        else:
+            q = np.asarray(queries, np.float32)
+            qid = np.full((q.shape[0],), self.n_points, np.int32)
+        grid, hit = self._grid_for(r)
+        t_grid = time.perf_counter() - t0
+        d2, idx, found, n_tests = fixed_radius_round(
+            self._pts_j, grid, q, qid, r, k, chunk=self._chunk
+        )
+        dt = time.perf_counter() - t0
+        found = np.asarray(found)
+        return KNNResult(
+            dists=np.sqrt(np.asarray(d2)),
+            idxs=np.asarray(idx),
+            n_tests=int(n_tests),
+            backend=self.backend_name,
+            found=found,
+            rounds=[RoundStats(0, r, q.shape[0], int((found >= k).sum()),
+                               int(n_tests), grid.res, grid.cap, dt,
+                               cache_hit=hit)],
+            timings={
+                "query_seconds": dt,
+                "grid_build_seconds": 0.0 if hit else t_grid,
+                "grid_builds": 0 if hit else 1,
+                "grid_cache_hits": 1 if hit else 0,
+            },
+            start_radius=r,
+            final_radius=r,
+        )
+
+    def stats(self) -> dict:
+        s = super().stats()
+        s.update(
+            grid_builds=self._grid_builds,
+            grid_cache_hits=self._grid_cache_hits,
+            cached_grids=len(self._grids),
+        )
+        return s

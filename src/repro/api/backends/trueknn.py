@@ -1,0 +1,357 @@
+"""TrueKNN backend — unbounded multi-round search (paper Alg. 3) as a
+resident, warm-starting index.  ``backend="trueknn"``.
+
+Round structure is the paper's: fixed-radius search over unresolved
+queries, retire those with >= k in-radius neighbors, grow the radius,
+re-fit the structure.  Two things make this an *index* rather than the old
+free function:
+
+* **Grid cache.**  Round radii are kept on a geometric lattice
+  ``anchor * growth**j`` anchored at the first batch's start radius, and
+  built grids are cached keyed by the lattice index ``j``.  A later batch
+  whose rounds hit the same lattice points reuses the binning outright —
+  the analogue of not re-fitting the BVH when the radius schedule repeats.
+  Grids only ever snap *up* (cell size >= search radius), so exactness is
+  untouched; radii at or beyond the cloud's extent share one single-cell
+  (brute-equivalent) grid.
+
+* **Warm-start radius.**  Each batch records the radius at which every
+  query resolved; an EMA of a low percentile of that distribution seeds
+  the next batch's start radius (snapped down to the lattice).  The first
+  batch pays the paper's Alg. 2 sampling plus the tiny-radius ramp-up
+  rounds; later batches start where the action is, so the serving loop
+  runs fewer rounds per batch.
+
+Safety: a round whose grid is a single cell and whose radius covers the
+cloud diagonal is already a brute-force pass — if it still fails to
+resolve every query (pathological inputs), the driver falls through to the
+exact brute oracle instead of spinning until ``max_rounds``.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.brute import brute_knn_engine
+from repro.core.fixed_radius import fixed_radius_round
+from repro.core.grid import _next_pow2, build_grid
+from repro.core.result import KNNResult, RoundStats
+from repro.core.sampling import sample_start_radius
+
+from ..index import NeighborIndex
+from ..registry import register_backend
+
+__all__ = ["TrueKNNIndex"]
+
+
+@register_backend("trueknn")
+class TrueKNNIndex(NeighborIndex):
+    """Resident multi-round unbounded-kNN index.
+
+    cfg:
+      growth:      per-round radius multiplier (> 1, default 2.0).
+      max_rounds:  grid-round budget before the exact brute tail (64).
+      chunk:       query tile for the fixed-radius kernel (2048).
+      seed:        RNG seed for start-radius sampling (paper Alg. 2).
+      cache_grids: reuse lattice-snapped grids across rounds/batches (True).
+      warm_start:  seed each batch's start radius from the previous
+                   batches' resolved-radius EMA (True).
+      warm_pct:    percentile of the resolved-radius distribution that the
+                   warm start targets (25.0 — most queries still take a few
+                   rounds, but the dead tiny-radius ramp is skipped).
+      warm_ema:    EMA weight of the newest batch (0.3).
+      max_cached_grids: LRU bound on the lattice grid cache, so per-call
+                   explicit ``query(radius=...)`` values below the anchor
+                   can't grow device memory without limit (64 — generous:
+                   a normal radius schedule spans O(log(extent/r0)) lattice
+                   points, well under the bound).
+
+    ``query(radius=...)`` overrides the start radius explicitly (the old
+    ``trueknn(start_radius=...)``); ``query(stop_radius=...)`` is the
+    paper's Sec. 5.5.1 early termination — tail queries keep the partial
+    (< k) neighbor lists they found, with ``found`` recording how many.
+    """
+
+    def __init__(
+        self,
+        points,
+        *,
+        growth: float = 2.0,
+        max_rounds: int = 64,
+        chunk: int = 2048,
+        seed: int = 0,
+        cache_grids: bool = True,
+        warm_start: bool = True,
+        warm_pct: float = 25.0,
+        warm_ema: float = 0.3,
+        max_cached_grids: int = 64,
+    ):
+        super().__init__(points)
+        assert growth > 1.0, "radius growth factor must exceed 1"
+        self._pts_j = jnp.asarray(self._pts)
+        self._growth = float(growth)
+        self._max_rounds = int(max_rounds)
+        self._chunk = int(chunk)
+        self._seed = int(seed)
+        self._cache_grids = bool(cache_grids)
+        self._warm_start = bool(warm_start)
+        self._warm_pct = float(warm_pct)
+        self._warm_ema = float(warm_ema)
+        self._max_cached_grids = max(1, int(max_cached_grids))
+
+        ext = (self._pts.max(0) - self._pts.min(0)).astype(np.float64)
+        self._extent = float(ext.max())
+        self._sq_diag = float(np.sum(ext * ext))  # max pairwise dist^2 bound
+
+        self._grids: dict = {}  # lattice index j -> Grid
+        self._anchor: Optional[float] = None  # lattice base radius
+        self._j_cap: Optional[int] = None  # lattice index of the 1-cell grid
+        self._warm_r: Optional[float] = None  # resolved-radius EMA
+        self._sampled_r: Optional[float] = None  # Alg. 2 result (per cloud)
+
+        self._c = {
+            "batches": 0,
+            "queries_served": 0,
+            "grid_builds": 0,
+            "grid_cache_hits": 0,
+            "rounds": 0,
+            "brute_tail_queries": 0,
+        }
+
+    # -- radius lattice & grid cache --------------------------------------
+
+    def _lattice_j(self, r: float) -> int:
+        return math.ceil(math.log(r / self._anchor, self._growth) - 1e-9)
+
+    def _set_anchor(self, r0: float) -> None:
+        self._anchor = r0
+        if self._extent <= r0:
+            self._j_cap = 0
+        else:
+            self._j_cap = math.ceil(
+                math.log(1.001 * self._extent / r0, self._growth)
+            )
+
+    def _grid_for(self, r: float):
+        """Grid with cell size >= r (exactness invariant), cached on the
+        radius lattice.  Returns (grid, cache_hit)."""
+        if not self._cache_grids:
+            self._c["grid_builds"] += 1
+            return build_grid(self._pts, r), False
+        j = min(self._lattice_j(r), self._j_cap)
+        g = self._grids.pop(j, None)
+        if g is not None:
+            self._grids[j] = g  # refresh LRU recency
+            self._c["grid_cache_hits"] += 1
+            return g, True
+        # at the cap the grid is a single cell per axis (covers any radius);
+        # below it, snap the build radius up to the lattice point.
+        build_r = self._anchor * self._growth**j
+        if j < self._j_cap:
+            build_r = max(build_r, r)
+        g = build_grid(self._pts, build_r)
+        self._grids[j] = g
+        self._c["grid_builds"] += 1
+        while len(self._grids) > self._max_cached_grids:
+            self._grids.pop(next(iter(self._grids)))
+        return g, False
+
+    def _start_radius(self, radius: Optional[float]):
+        """(radius, source) — explicit > warm EMA > Alg. 2 sampling."""
+        if radius is not None:
+            return max(float(radius), 1e-12), "explicit"
+        if self._warm_start and self._warm_r is not None:
+            r = self._warm_r
+            if self._anchor is not None:
+                # snap DOWN to the lattice: conservative (at most one extra
+                # round) and guarantees grid-cache hits across batches
+                j = min(
+                    math.floor(
+                        math.log(r / self._anchor, self._growth) + 1e-9
+                    ),
+                    self._j_cap,
+                )
+                r = self._anchor * self._growth**j
+            return r, "warm"
+        if self._sampled_r is None:
+            self._sampled_r = sample_start_radius(self._pts, seed=self._seed)
+        return self._sampled_r, "sampled"
+
+    # -- the hot path ------------------------------------------------------
+
+    def query(
+        self,
+        queries,
+        k: int,
+        *,
+        radius: Optional[float] = None,
+        stop_radius: Optional[float] = None,
+    ) -> KNNResult:
+        t_call = time.perf_counter()
+        n, d = self._pts.shape
+        if queries is None:
+            q_all = self._pts
+            qid_all = np.arange(n, dtype=np.int32)
+            assert k <= n - 1, "k must be <= N-1 when the dataset queries itself"
+        else:
+            q_all = np.asarray(queries, dtype=np.float32)
+            qid_all = np.full((q_all.shape[0],), n, dtype=np.int32)
+            assert k <= n
+        q_total = q_all.shape[0]
+
+        r, r_source = self._start_radius(radius)
+        # A warm/sampled start above stop_radius would break out before any
+        # round ran and hand back an empty answer that depends on hidden
+        # index state; clamp so at least one round searches at the stop
+        # boundary (explicit radii are honored verbatim).
+        if (
+            stop_radius is not None
+            and r_source != "explicit"
+            and r > stop_radius
+        ):
+            r = float(stop_radius)
+        if self._anchor is None:
+            self._set_anchor(r)
+        r0 = r
+
+        out_d = np.full((q_total, k), np.inf, dtype=np.float32)
+        out_i = np.full((q_total, k), n, dtype=np.int32)
+        found_all = np.zeros((q_total,), dtype=np.int64)
+        resolved_at = np.full((q_total,), np.nan)  # radius that resolved each
+        alive = np.arange(q_total, dtype=np.int64)
+
+        rounds: list = []
+        total_tests = 0
+        t_build = 0.0
+        ridx = 0
+        force_brute_tail = False
+        clamp_r = 4.0 * self._extent
+        while alive.size and ridx < self._max_rounds:
+            if stop_radius is not None and r > stop_radius:
+                break
+            t0 = time.perf_counter()
+            grid, hit = self._grid_for(r)
+            t_build += 0.0 if hit else time.perf_counter() - t0
+
+            m = alive.size
+            m_pad = _next_pow2(m)
+            q = np.full((m_pad, d), np.inf, dtype=np.float32)
+            q[:m] = q_all[alive]
+            qid = np.full((m_pad,), n, dtype=np.int32)
+            qid[:m] = qid_all[alive]
+
+            d2, idx, found, tests = fixed_radius_round(
+                self._pts_j, grid, q, qid, r, k, chunk=min(self._chunk, m_pad)
+            )
+            d2 = np.asarray(d2[:m])
+            idx = np.asarray(idx[:m])
+            found = np.asarray(found[:m])
+            total_tests += int(tests)
+
+            resolved = found >= k
+            done_ids = alive[resolved]
+            out_d[done_ids] = np.sqrt(d2[resolved])
+            out_i[done_ids] = idx[resolved]
+            found_all[done_ids] = found[resolved]
+            resolved_at[done_ids] = r
+            # unresolved queries keep their best-so-far partial lists: this
+            # is what the stop_radius tail hands back (paper Sec. 5.5.1 —
+            # "however many neighbors they found")
+            tail_ids = alive[~resolved]
+            out_d[tail_ids] = np.sqrt(d2[~resolved])
+            out_i[tail_ids] = idx[~resolved]
+            found_all[tail_ids] = found[~resolved]
+            alive = tail_ids
+
+            dt = time.perf_counter() - t0
+            rounds.append(
+                RoundStats(ridx, r, m, int(resolved.sum()), int(tests),
+                           grid.res, grid.cap, dt, cache_hit=hit)
+            )
+            ridx += 1
+
+            # Guard: a single-cell grid whose radius covers the cloud
+            # diagonal makes the round a brute-force pass over all points.
+            # If queries still failed to resolve, growing the radius cannot
+            # help — fall through to the exact oracle instead of spinning.
+            brute_equiv = all(res == 1 for res in grid.res) and (
+                r * r >= self._sq_diag
+            )
+            if alive.size and brute_equiv:
+                force_brute_tail = True
+                break
+
+            r *= self._growth
+            # radius covering 4x the extent is always brute-equivalent;
+            # growing past it only loses float precision
+            if r > clamp_r and alive.size:
+                r = clamp_r
+
+        if alive.size and (force_brute_tail or stop_radius is None):
+            # max_rounds exhausted or brute-equivalent round failed: finish
+            # with the exact oracle (self-exclusion preserved via query ids).
+            t0 = time.perf_counter()
+            bd, bi, btests = brute_knn_engine(
+                self._pts_j, k, queries=q_all[alive], query_ids=qid_all[alive]
+            )
+            out_d[alive] = np.asarray(bd)
+            out_i[alive] = np.asarray(bi)
+            found_all[alive] = k
+            total_tests += int(btests)
+            self._c["brute_tail_queries"] += int(alive.size)
+            rounds.append(
+                RoundStats(ridx, float("inf"), int(alive.size),
+                           int(alive.size), int(btests), (), 0,
+                           time.perf_counter() - t0)
+            )
+            alive = np.empty((0,), dtype=np.int64)
+
+        # warm-start update: EMA of a low percentile of the radii at which
+        # queries resolved (brute-tail queries carry no radius information)
+        fin = resolved_at[np.isfinite(resolved_at)]
+        if self._warm_start and fin.size:
+            target = float(np.percentile(fin, self._warm_pct))
+            if self._warm_r is None:
+                self._warm_r = target
+            else:
+                self._warm_r = (
+                    (1.0 - self._warm_ema) * self._warm_r
+                    + self._warm_ema * target
+                )
+
+        n_builds = sum(1 for rs in rounds if np.isfinite(rs.radius) and not rs.cache_hit)
+        n_hits = sum(1 for rs in rounds if rs.cache_hit)
+        self._c["batches"] += 1
+        self._c["queries_served"] += q_total
+        self._c["rounds"] += len(rounds)
+
+        return KNNResult(
+            dists=out_d,
+            idxs=out_i,
+            n_tests=total_tests,
+            backend=self.backend_name,
+            found=found_all,
+            rounds=rounds,
+            timings={
+                "query_seconds": time.perf_counter() - t_call,
+                "grid_build_seconds": t_build,
+                "grid_builds": n_builds,
+                "grid_cache_hits": n_hits,
+                "start_radius_source": r_source,
+                "warm_start_radius": r0 if r_source == "warm" else None,
+            },
+            start_radius=r0,
+            final_radius=rounds[-1].radius if rounds else r0,
+        )
+
+    def stats(self) -> dict:
+        s = super().stats()
+        s.update(self._c)
+        s["cached_grids"] = len(self._grids)
+        s["warm_radius"] = self._warm_r
+        return s

@@ -1,0 +1,104 @@
+"""The ``NeighborIndex`` protocol and ``build_index`` entry point.
+
+The paper's workload shape is *build once, query many*: the point cloud is
+resident, query batches stream in, and the search structure amortizes across
+batches.  A ``NeighborIndex`` is that resident handle; ``query`` is the only
+hot-path call.  Backends are looked up in the string-keyed registry so new
+engines plug in without touching call sites.
+"""
+
+from __future__ import annotations
+
+import abc
+from typing import Optional
+
+import numpy as np
+
+from repro.core.result import KNNResult
+
+from .registry import get_backend
+
+__all__ = ["NeighborIndex", "build_index"]
+
+
+class NeighborIndex(abc.ABC):
+    """A built search structure over a resident point cloud.
+
+    Subclasses ingest ``points`` once in ``__init__`` (the *build*) and
+    answer ``query`` repeatedly, carrying whatever state lets later batches
+    go faster (cached grids, warm-start radii, device-resident shards).
+    """
+
+    backend_name: str = "?"
+
+    def __init__(self, points):
+        pts = np.asarray(points, dtype=np.float32)
+        assert pts.ndim == 2, f"points must be (N, d), got {pts.shape}"
+        self._pts = pts
+
+    # -- introspection ----------------------------------------------------
+
+    @property
+    def points(self) -> np.ndarray:
+        """The resident cloud (host copy, (N, d) float32)."""
+        return self._pts
+
+    @property
+    def n_points(self) -> int:
+        return self._pts.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self._pts.shape[1]
+
+    def __len__(self) -> int:
+        return self.n_points
+
+    def stats(self) -> dict:
+        """Cumulative counters since build; backends extend this."""
+        return {
+            "backend": self.backend_name,
+            "n_points": self.n_points,
+            "dim": self.dim,
+        }
+
+    # -- the hot path -----------------------------------------------------
+
+    @abc.abstractmethod
+    def query(
+        self,
+        queries,
+        k: int,
+        *,
+        radius: Optional[float] = None,
+        stop_radius: Optional[float] = None,
+    ) -> KNNResult:
+        """k nearest neighbors of ``queries`` ((Q, d), or None to let the
+        dataset query itself with self-exclusion).
+
+        ``radius`` semantics are backend-defined but consistent in spirit:
+        the fixed-radius backend searches exactly that radius, multi-round
+        backends treat it as the start radius, brute force post-filters.
+        ``stop_radius`` (where supported) terminates radius growth, leaving
+        tail queries with whatever neighbors they found (paper Sec. 5.5.1).
+        """
+
+
+def build_index(points, *, backend: str = "trueknn", **cfg) -> NeighborIndex:
+    """Build a resident neighbor-search index.
+
+    Usage::
+
+        index = build_index(pts, backend="trueknn")
+        res = index.query(batch, k=8)          # KNNResult
+        ...                                     # later batches reuse grids
+
+    ``cfg`` is passed to the backend constructor verbatim (each documents
+    its own knobs).  Registered backends: see ``available_backends()``.
+    """
+    cls = get_backend(backend)
+    index = cls(points, **cfg)
+    assert isinstance(index, NeighborIndex), (
+        f"backend {backend!r} ({cls.__name__}) must subclass NeighborIndex"
+    )
+    return index

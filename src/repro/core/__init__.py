@@ -1,28 +1,64 @@
-"""TrueKNN core: unbounded RT-style neighbor search, adapted to TPU."""
+"""TrueKNN core: unbounded RT-style neighbor search, adapted to TPU.
 
-from .brute import brute_knn
+The engines here (grid binning, fixed-radius rounds, the brute oracle) are
+shared infrastructure; the public search surface is the build-once /
+query-many API in ``repro.api``::
+
+    from repro.api import build_index
+    index = build_index(points, backend="trueknn")   # or fixed_radius /
+    res = index.query(queries, k=8)                  # brute / distributed
+
+Every backend returns the unified ``KNNResult``.  The historical free
+functions (``trueknn``, ``fixed_radius_knn``, ``brute_knn``) remain as
+deprecated shims that build a throwaway index per call — correct, but they
+re-pay structure construction on every invocation, which is exactly what
+the index API exists to amortize.
+"""
+
+from .brute import brute_knn, brute_knn_engine
 from .datasets import DATASETS, make_dataset
 from .fixed_radius import fixed_radius_knn, fixed_radius_round
 from .grid import Grid, build_grid
+from .result import KNNResult, RoundStats
 from .sampling import (
     max_knn_distance,
     percentile_knn_distance,
     sample_start_radius,
 )
-from .trueknn import RoundStats, TrueKNNResult, trueknn
+from .trueknn import TrueKNNResult, trueknn
 
 __all__ = [
     "brute_knn",
+    "brute_knn_engine",
     "DATASETS",
     "make_dataset",
     "fixed_radius_knn",
     "fixed_radius_round",
     "Grid",
     "build_grid",
+    "KNNResult",
     "max_knn_distance",
     "percentile_knn_distance",
     "sample_start_radius",
     "RoundStats",
     "TrueKNNResult",
     "trueknn",
+    # lazily re-exported from repro.api via __getattr__:
+    "build_index",
+    "NeighborIndex",
+    "register_backend",
+    "available_backends",
 ]
+
+_API_NAMES = ("build_index", "NeighborIndex", "register_backend",
+              "available_backends")
+
+
+def __getattr__(name):
+    # late-bound so importing repro.core never drags in the backend modules
+    # (which import core submodules) during package initialization
+    if name in _API_NAMES:
+        from repro import api
+
+        return getattr(api, name)
+    raise AttributeError(f"module 'repro.core' has no attribute {name!r}")

@@ -2,8 +2,13 @@
 
 Chunked over queries so the (Q, N) distance matrix never materializes whole.
 Used (a) as the correctness oracle for every other search path, (b) as the
-non-accelerated comparison point (paper Fig. 4), and (c) as the exact
-subroutine inside start-radius sampling (paper Alg. 2 uses sklearn).
+non-accelerated comparison point (paper Fig. 4), (c) as the exact
+subroutine inside start-radius sampling (paper Alg. 2 uses sklearn), and
+(d) as the exact tail of TrueKNN's multi-round driver.
+
+``brute_knn_engine`` is the raw engine; the public ``brute_knn`` is a
+deprecated shim over ``repro.api.build_index(..., backend="brute")`` kept
+for the pre-index call sites.
 """
 
 from __future__ import annotations
@@ -12,8 +17,9 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-__all__ = ["brute_knn"]
+__all__ = ["brute_knn", "brute_knn_engine"]
 
 
 @partial(jax.jit, static_argnames=("k", "chunk", "exclude_self"))
@@ -48,11 +54,14 @@ def _brute_impl(points, queries, query_ids, *, k, chunk, exclude_self):
     return td.reshape(q_total, k), ti.reshape(q_total, k)
 
 
-def brute_knn(points, k, *, queries=None, chunk: int = 512):
-    """Exact kNN.  Returns (dists (Q,k), idxs (Q,k), n_tests).
+def brute_knn_engine(points, k, *, queries=None, query_ids=None, chunk: int = 512):
+    """Exact kNN engine.  Returns (dists (Q,k), idxs (Q,k), n_tests).
 
-    When ``queries`` is None the dataset queries itself and self-matches are
-    excluded (the paper's setting).
+    ``queries`` None: the dataset queries itself, self-matches excluded (the
+    paper's setting).  ``query_ids`` (with explicit ``queries``): global
+    point index of each query for self-exclusion — pass N (or any
+    out-of-range id) for queries that are not dataset members.  This is how
+    TrueKNN's brute tail keeps self-exclusion for still-alive self-queries.
     """
     pts = jnp.asarray(points, jnp.float32)
     n = pts.shape[0]
@@ -60,17 +69,24 @@ def brute_knn(points, k, *, queries=None, chunk: int = 512):
         q = pts
         qid = jnp.arange(n, dtype=jnp.int32)
         exclude_self = True
+        k_cap = n - 1
     else:
         q = jnp.asarray(queries, jnp.float32)
-        qid = jnp.full((q.shape[0],), n, jnp.int32)
-        exclude_self = False
+        if query_ids is None:
+            qid = jnp.full((q.shape[0],), n, jnp.int32)
+            exclude_self = False
+            k_cap = n
+        else:
+            qid = jnp.asarray(query_ids, jnp.int32)
+            exclude_self = True
+            k_cap = n  # member queries must request k <= N-1 upstream
     q_total = q.shape[0]
     chunk = int(min(chunk, max(1, q_total)))
     pad = (-q_total) % chunk
     if pad:
         q = jnp.concatenate([q, jnp.zeros((pad, q.shape[1]), q.dtype)])
         qid = jnp.concatenate([qid, jnp.full((pad,), n, qid.dtype)])
-    k_eff = min(int(k), n - 1 if exclude_self else n)
+    k_eff = min(int(k), k_cap)
     d2, idx = _brute_impl(
         pts, q, qid, k=k_eff, chunk=chunk, exclude_self=exclude_self
     )
@@ -80,3 +96,16 @@ def brute_knn(points, k, *, queries=None, chunk: int = 512):
         idx = jnp.pad(idx, ((0, 0), (0, k - k_eff)), constant_values=n)
     n_tests = q_total * n
     return jnp.sqrt(d2), idx, n_tests
+
+
+def brute_knn(points, k, *, queries=None, chunk: int = 512):
+    """Deprecated shim: exact kNN via the registry's "brute" backend.
+
+    Returns (dists (Q,k), idxs (Q,k), n_tests) — the historical tuple.
+    Prefer ``build_index(points, backend="brute").query(queries, k)`` and
+    hold the index across batches.
+    """
+    from repro.api import build_index
+
+    res = build_index(points, backend="brute", chunk=chunk).query(queries, k)
+    return res.dists, res.idxs, res.n_tests

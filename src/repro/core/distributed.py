@@ -105,6 +105,7 @@ def distributed_trueknn(
     growth: float = 2.0,
     max_rounds: int = 32,
     use_kernel: bool = False,
+    points_device=None,
 ):
     """Multi-round unbounded kNN over mesh-sharded points (host-orchestrated
     rounds, paper Alg. 3).  Query retirement compacts between rounds.
@@ -136,7 +137,11 @@ def distributed_trueknn(
     batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     bsz = int(np.prod([mesh.shape[a] for a in batch_axes])) or 1
 
-    pts_j = jax.device_put(pts, NamedSharding(mesh, P("model", None)))
+    # a resident caller (DistributedIndex) pre-places the shards once at
+    # build; one-shot callers pay the transfer here
+    if points_device is None:
+        points_device = jax.device_put(pts, NamedSharding(mesh, P("model", None)))
+    pts_j = points_device
     qsh = NamedSharding(mesh, P(batch_axes or None, None))
     idsh = NamedSharding(mesh, P(batch_axes or None))
 

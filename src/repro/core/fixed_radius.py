@@ -149,22 +149,17 @@ def fixed_radius_round(
 
 
 def fixed_radius_knn(points, radius, k, *, queries=None, chunk: int = 2048):
-    """Paper Alg. 1 analogue: fixed-radius kNN for all queries (self-excluded
-    when queries are the dataset itself).  Builds its own grid.
+    """Deprecated shim: paper Alg. 1 via the registry's "fixed_radius"
+    backend (self-excluded when queries are the dataset itself).  Builds a
+    throwaway index — and therefore a fresh grid — per call; hold a
+    ``build_index(points, backend="fixed_radius", radius=r)`` handle to
+    amortize the grid across batches.
 
     Returns (dists (Q,k), idxs (Q,k), found (Q,), n_tests).
     """
-    from .grid import build_grid
+    from repro.api import build_index
 
-    pts = jnp.asarray(points, jnp.float32)
-    if queries is None:
-        q = pts
-        qid = jnp.arange(pts.shape[0], dtype=jnp.int32)
-    else:
-        q = jnp.asarray(queries, jnp.float32)
-        qid = jnp.full((q.shape[0],), pts.shape[0], jnp.int32)
-    grid = build_grid(pts, radius)
-    d2, idx, found, tests = fixed_radius_round(
-        pts, grid, q, qid, radius, k, chunk=chunk
-    )
-    return jnp.sqrt(d2), idx, found, tests
+    res = build_index(
+        points, backend="fixed_radius", radius=radius, chunk=chunk
+    ).query(queries, k)
+    return res.dists, res.idxs, res.found, res.n_tests

@@ -1,0 +1,90 @@
+"""Unified result types shared by every neighbor-search backend.
+
+One dataclass — ``KNNResult`` — is returned by all ``NeighborIndex``
+backends (see ``repro.api``) and by the deprecated free-function shims
+(``trueknn`` / ``fixed_radius_knn``), so call sites never branch on which
+engine produced an answer.  Lives in ``repro.core`` (dependency-free) so
+both the core engines and the API layer can import it without cycles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+__all__ = ["KNNResult", "RoundStats"]
+
+
+@dataclasses.dataclass
+class RoundStats:
+    """Per-round telemetry of a multi-round (TrueKNN-style) search.
+
+    ``radius`` is the radius *actually searched* that round — recorded
+    explicitly rather than reconstructed from the growth factor, so the
+    ``stop_radius`` early-break, the extent clamp and the brute-force tail
+    (``radius == inf``, ``grid_res == ()``) all report truthfully.
+    ``cache_hit`` marks rounds that reused a cached grid instead of
+    rebuilding (see the ``trueknn`` backend's grid cache).
+    """
+
+    round_idx: int
+    radius: float
+    n_queries: int
+    n_resolved: int
+    n_tests: int
+    grid_res: tuple
+    grid_cap: int
+    seconds: float
+    cache_hit: bool = False
+
+
+@dataclasses.dataclass
+class KNNResult:
+    """Neighbor-search answer, identical across backends.
+
+    Attributes:
+      dists:   (Q, k) float32 true (non-squared) distances; inf where fewer
+               than k neighbors were produced (radius-bounded / stop-radius
+               tail queries).
+      idxs:    (Q, k) int32 dataset indices; the sentinel N marks padding.
+      n_tests: candidate distance evaluations performed (the paper's
+               "intersection tests" work metric); 0 means "not counted"
+               (backends whose engine doesn't meter work).
+      found:   optional (Q,) int count of in-radius neighbors seen for each
+               query by the round that produced its answer (fixed-radius
+               semantics; < k flags an unresolved tail query).
+      rounds:  [RoundStats], empty for single-shot backends.
+      timings: per-call wall-clock + counters, e.g. ``query_seconds``,
+               ``grid_build_seconds``, ``grid_builds``, ``grid_cache_hits``,
+               ``warm_start_radius``.
+      start_radius / final_radius: first and last radius actually searched
+               (None where the notion doesn't apply, e.g. brute force).
+      backend: registry name of the backend that produced this result.
+    """
+
+    dists: np.ndarray
+    idxs: np.ndarray
+    n_tests: int
+    backend: str = ""
+    found: Optional[np.ndarray] = None
+    rounds: list = dataclasses.field(default_factory=list)
+    timings: dict = dataclasses.field(default_factory=dict)
+    start_radius: Optional[float] = None
+    final_radius: Optional[float] = None
+
+    @property
+    def n_rounds(self) -> int:
+        return len(self.rounds)
+
+    @property
+    def total_tests(self) -> int:
+        """Legacy alias (pre-API ``TrueKNNResult`` field name)."""
+        return self.n_tests
+
+    @property
+    def total_seconds(self) -> float:
+        if self.rounds:
+            return sum(r.seconds for r in self.rounds)
+        return float(self.timings.get("query_seconds", 0.0))

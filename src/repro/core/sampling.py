@@ -10,7 +10,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from .brute import brute_knn
+from .brute import brute_knn_engine
 
 __all__ = ["sample_start_radius", "max_knn_distance", "percentile_knn_distance"]
 
@@ -27,7 +27,7 @@ def sample_start_radius(
     # Exact kNN of the sampled queries against the full dataset; queries are
     # dataset members, so drop the zero-distance self match via k+1.
     kq = min(sample_k + 1, n)
-    dists, _, _ = brute_knn(pts, kq, queries=pts[sel])
+    dists, _, _ = brute_knn_engine(pts, kq, queries=pts[sel])
     d = np.asarray(dists)[:, 1:]  # drop self column
     d = d[np.isfinite(d) & (d > 0)]
     if d.size == 0:
@@ -41,13 +41,13 @@ def max_knn_distance(points, k: int, *, chunk: int = 1024) -> float:
     This is the paper's *oracle* baseline radius (Sec. 5.2.1) — the smallest
     fixed radius guaranteed to resolve every query.
     """
-    dists, _, _ = brute_knn(points, k, chunk=chunk)
+    dists, _, _ = brute_knn_engine(points, k, chunk=chunk)
     d = np.asarray(dists)
     return float(np.max(d[:, k - 1]))
 
 
 def percentile_knn_distance(points, k: int, pct: float = 99.0) -> float:
     """The paper's 99th-percentile thought-experiment radius (Sec. 5.5.1)."""
-    dists, _, _ = brute_knn(points, k)
+    dists, _, _ = brute_knn_engine(points, k)
     d = np.asarray(dists)[:, k - 1]
     return float(np.percentile(d, pct))

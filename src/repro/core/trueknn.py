@@ -1,69 +1,34 @@
-"""TrueKNN — unbounded multi-round kNN (paper Algorithm 3), host-orchestrated.
+"""TrueKNN — unbounded multi-round kNN (paper Algorithm 3).
 
-Round structure is exactly the paper's:
+The engine now lives behind the build-once/query-many API as the
+``"trueknn"`` backend (``repro.api.backends.trueknn``), where built grids
+cache across query batches and start radii warm-start from the previous
+batches' resolved-radius distribution.  This module keeps the historical
+free function as a thin deprecated shim over the registry — it builds a
+fresh index per call, so it pays structure construction every time.
+Serving loops should hold a ``NeighborIndex`` instead::
 
-  radius <- RandomSample(D)                      (sampling.py, Alg. 2)
-  while unresolved queries remain:
-      fixed-radius kNN over unresolved queries   (fixed_radius.py, Alg. 1)
-      retire queries that found >= k neighbors
-      radius *= growth; re-fit the structure     (grid rebuild at new cell size)
+    from repro.api import build_index
+    index = build_index(points, backend="trueknn")
+    res = index.query(queries, k)        # KNNResult; repeat cheaply
 
-Retired queries are *compacted away* between rounds — the analogue of not
-launching their rays.  Compacted query counts are padded to power-of-two
-buckets so jit recompilation is bounded at O(log Q) shapes total.
-
-Each round recomputes its candidates from scratch within the current radius
-(no cross-round merge), so results are exact whenever the round that retires a
-query had >= k in-radius neighbors: the k nearest of such a query all lie
-within the radius, and the grid stencil covers the full radius ball.
+``TrueKNNResult`` is now an alias of the unified ``KNNResult`` (the old
+field names survive as properties), and ``RoundStats`` moved to
+``repro.core.result``.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import time
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from .fixed_radius import fixed_radius_round
-from .grid import build_grid
-from .sampling import sample_start_radius
+from .result import KNNResult, RoundStats
 
 __all__ = ["trueknn", "TrueKNNResult", "RoundStats"]
 
-
-@dataclasses.dataclass
-class RoundStats:
-    round_idx: int
-    radius: float
-    n_queries: int
-    n_resolved: int
-    n_tests: int
-    grid_res: tuple
-    grid_cap: int
-    seconds: float
-
-
-@dataclasses.dataclass
-class TrueKNNResult:
-    dists: np.ndarray  # (Q, k) float32, true (non-squared) distances
-    idxs: np.ndarray  # (Q, k) int32
-    n_rounds: int
-    total_tests: int
-    start_radius: float
-    final_radius: float
-    rounds: list  # [RoundStats]
-
-    @property
-    def total_seconds(self) -> float:
-        return sum(r.seconds for r in self.rounds)
-
-
-def _next_pow2(x: int) -> int:
-    return 1 << max(0, (x - 1).bit_length())
+# legacy name: pre-API code annotated results as TrueKNNResult
+TrueKNNResult = KNNResult
 
 
 def trueknn(
@@ -77,92 +42,23 @@ def trueknn(
     stop_radius: Optional[float] = None,
     chunk: int = 2048,
     seed: int = 0,
-) -> TrueKNNResult:
-    """Unbounded kNN for every query; radius discovered dynamically.
+) -> KNNResult:
+    """Deprecated shim: unbounded kNN via the registry's "trueknn" backend.
 
-    ``stop_radius`` implements the paper's 99th-percentile thought experiment
-    (Sec. 5.5.1): terminate once the radius exceeds it, leaving tail queries
-    with however many neighbors they found.
+    Builds a throwaway index per call; prefer ``build_index`` + repeated
+    ``query`` wherever the point cloud is resident.  ``stop_radius``
+    implements the paper's 99th-percentile thought experiment (Sec. 5.5.1):
+    terminate once the radius exceeds it, leaving tail queries with however
+    many neighbors they found (``result.found`` counts them).
     """
-    pts = jnp.asarray(points, jnp.float32)
-    n, d = pts.shape
-    if queries is None:
-        q_all = np.asarray(pts)
-        qid_all = np.arange(n, dtype=np.int32)
-        assert k <= n - 1, "k must be <= N-1 when the dataset queries itself"
-    else:
-        q_all = np.asarray(queries, dtype=np.float32)
-        qid_all = np.full((q_all.shape[0],), n, dtype=np.int32)
-        assert k <= n
-    q_total = q_all.shape[0]
+    from repro.api import build_index
 
-    r = float(start_radius) if start_radius is not None else sample_start_radius(
-        np.asarray(pts), seed=seed
+    index = build_index(
+        points,
+        backend="trueknn",
+        growth=growth,
+        max_rounds=max_rounds,
+        chunk=chunk,
+        seed=seed,
     )
-    r0 = r
-
-    out_d = np.full((q_total, k), np.inf, dtype=np.float32)
-    out_i = np.full((q_total, k), n, dtype=np.int32)
-    alive = np.arange(q_total, dtype=np.int64)
-
-    extent = float(np.max(np.asarray(pts).max(0) - np.asarray(pts).min(0)))
-    rounds: list = []
-    total_tests = 0
-    ridx = 0
-    while alive.size and ridx < max_rounds:
-        if stop_radius is not None and r > stop_radius:
-            break
-        t0 = time.perf_counter()
-        grid = build_grid(np.asarray(pts), r)
-
-        m = alive.size
-        m_pad = _next_pow2(m)
-        q = np.full((m_pad, d), np.inf, dtype=np.float32)
-        q[:m] = q_all[alive]
-        qid = np.full((m_pad,), n, dtype=np.int32)
-        qid[:m] = qid_all[alive]
-
-        d2, idx, found, tests = fixed_radius_round(
-            pts, grid, q, qid, r, k, chunk=min(chunk, m_pad)
-        )
-        d2 = np.asarray(d2[:m])
-        idx = np.asarray(idx[:m])
-        found = np.asarray(found[:m])
-        total_tests += int(tests)
-
-        resolved = found >= k
-        done_ids = alive[resolved]
-        out_d[done_ids] = np.sqrt(d2[resolved])
-        out_i[done_ids] = idx[resolved]
-        alive = alive[~resolved]
-
-        dt = time.perf_counter() - t0
-        rounds.append(
-            RoundStats(ridx, r, m, int(resolved.sum()), int(tests), grid.res, grid.cap, dt)
-        )
-        ridx += 1
-        r *= growth
-        # Safety: once the radius covers the whole extent the grid is a single
-        # cell and the round is a brute-force pass — it must resolve all.
-        if r > 4.0 * extent and alive.size:
-            r = 4.0 * extent
-
-    if alive.size and stop_radius is None:
-        # max_rounds exhausted (pathological growth config): brute-force tail.
-        from .brute import brute_knn
-
-        bd, bi, btests = brute_knn(np.asarray(pts), k, queries=q_all[alive])
-        out_d[alive] = np.asarray(bd)
-        out_i[alive] = np.asarray(bi)
-        total_tests += int(btests)
-        alive = np.empty((0,), dtype=np.int64)
-
-    return TrueKNNResult(
-        dists=out_d,
-        idxs=out_i,
-        n_rounds=len(rounds),
-        total_tests=total_tests,
-        start_radius=r0,
-        final_radius=r / growth if rounds else r0,
-        rounds=rounds,
-    )
+    return index.query(queries, k, radius=start_radius, stop_radius=stop_radius)

@@ -11,21 +11,25 @@ from __future__ import annotations
 
 import jax
 
+# jax.sharding.AxisType landed after 0.4.x; explicit-Auto is the default
+# behavior there anyway, so older jax just omits the argument.
+_AXIS_TYPE = getattr(jax.sharding, "AxisType", None)
+
+
+def _make_mesh(shape, axes):
+    if _AXIS_TYPE is not None:
+        return jax.make_mesh(
+            shape, axes, axis_types=(_AXIS_TYPE.Auto,) * len(axes)
+        )
+    return jax.make_mesh(shape, axes)
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape,
-        axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """Degenerate 1x1 mesh for CPU tests of the pjit code paths."""
-    return jax.make_mesh(
-        (1, 1),
-        ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return _make_mesh((1, 1), ("data", "model"))

@@ -31,7 +31,7 @@ _SEP = "§"
 
 
 def _flatten(tree):
-    leaves, treedef = jax.tree.flatten_with_path(tree)
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
     out = {}
     for path, leaf in leaves:
         key = _SEP.join(str(p) for p in path)
@@ -93,7 +93,7 @@ def restore_checkpoint(directory, step: int, like: dict, *, shardings=None):
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
     data = np.load(os.path.join(path, "arrays.npz"))
-    flat_like, treedef = jax.tree.flatten_with_path(like)
+    flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
     keys = [_SEP.join(str(p) for p in path_) for path_, _ in flat_like]
     missing = [k for k in keys if k not in data.files]
     if missing:

@@ -1,0 +1,26 @@
+"""Test-suite bootstrap.
+
+If the real ``hypothesis`` package is unavailable (the container image does
+not ship it and installs are frozen), register the deterministic stub from
+``repro._compat`` under the same import name before any test module imports
+it.  CI installs the real library, so this path only engages locally.
+"""
+
+import sys
+import types
+
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    from repro._compat import hypothesis_stub
+
+    mod = types.ModuleType("hypothesis")
+    mod.given = hypothesis_stub.given
+    mod.settings = hypothesis_stub.settings
+    mod.strategies = hypothesis_stub.strategies
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "sampled_from", "booleans"):
+        setattr(st_mod, name, getattr(hypothesis_stub.strategies, name))
+    mod.strategies = st_mod
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st_mod

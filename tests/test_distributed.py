@@ -37,10 +37,9 @@ def run_sub(script: str, timeout=560) -> str:
 
 
 def _mk_mesh():
-    return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    from repro.launch.mesh import make_host_mesh
+
+    return make_host_mesh()
 
 
 def test_param_shardings_cover_every_leaf():
