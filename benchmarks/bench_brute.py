@@ -1,6 +1,6 @@
 """Paper Fig. 4: TrueKNN vs the non-RT (cuML-style) brute-force kNN, k=5."""
 
-from repro.api import build_index
+from repro.api import KnnSpec, build_index
 from repro.core import make_dataset
 
 from .common import cold_trueknn, emit, timed
@@ -12,7 +12,7 @@ def main():
             pts = make_dataset(name, n, seed=1)
             res, t_true = timed(lambda: cold_trueknn(pts, 5))
             oracle = build_index(pts, backend="brute")
-            _, t_brute = timed(lambda: oracle.query(None, 5))
+            _, t_brute = timed(lambda: oracle.query(None, KnnSpec(5)))
             emit(
                 f"vs_brute/{name}/n={n}",
                 t_true * 1e6,

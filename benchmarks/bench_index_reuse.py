@@ -21,7 +21,7 @@ import time
 
 import numpy as np
 
-from repro.api import build_index
+from repro.api import KnnSpec, build_index
 from repro.core import make_dataset
 
 from .common import emit
@@ -46,7 +46,7 @@ def main(n=20_000, n_batches=4, batch_size=512, k=8) -> dict:
     reuse_ms, rounds, builds, hits = [], [], [], []
     for b, qs in enumerate(batches):
         t0 = time.perf_counter()
-        res = index.query(qs, k)
+        res = index.query(qs, KnnSpec(k))
         dt = (time.perf_counter() - t0) * 1e3
         reuse_ms.append(dt)
         rounds.append(res.n_rounds)
@@ -64,7 +64,7 @@ def main(n=20_000, n_batches=4, batch_size=512, k=8) -> dict:
     rebuild_ms = []
     for qs in batches:
         t0 = time.perf_counter()
-        build_index(pts, backend="trueknn").query(qs, k)
+        build_index(pts, backend="trueknn").query(qs, KnnSpec(k))
         rebuild_ms.append((time.perf_counter() - t0) * 1e3)
 
     warm = reuse_ms[1:]

@@ -5,7 +5,7 @@ still wins; (c) full TrueKNN can beat the 99th-pct baseline outright."""
 
 import numpy as np
 
-from repro.api import build_index
+from repro.api import HybridSpec, build_index
 from repro.core import make_dataset, percentile_knn_distance
 
 from .common import cold_trueknn, emit, timed
@@ -19,8 +19,8 @@ def main():
         r99 = percentile_knn_distance(pts, k, 99.0)
         # 99th-pct-terminated TrueKNN vs 99th-pct-radius baseline
         res99, t99 = timed(lambda: cold_trueknn(pts, k, stop_radius=r99))
-        base99 = build_index(pts, backend="fixed_radius", radius=r99)
-        b_res, t_b99 = timed(lambda: base99.query(None, k))
+        base99 = build_index(pts, backend="fixed_radius")
+        b_res, t_b99 = timed(lambda: base99.query(None, HybridSpec(k, r99)))
         btests = b_res.n_tests
         # full (unbounded) TrueKNN
         resf, tf = timed(lambda: cold_trueknn(pts, k))

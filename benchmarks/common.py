@@ -21,7 +21,7 @@ import time
 
 import numpy as np
 
-from repro.api import build_index
+from repro.api import HybridSpec, KnnSpec, build_index
 from repro.core import make_dataset, max_knn_distance  # noqa: F401  (re-export)
 
 ROWS: list = []
@@ -43,7 +43,7 @@ def timed(fn, *args, repeats: int = 1, **kwargs):
 def cold_trueknn(pts, k, *, start_radius=None, stop_radius=None):
     """One-shot TrueKNN: fresh index per call (paper-style measurement)."""
     return build_index(pts, backend="trueknn").query(
-        None, k, radius=start_radius, stop_radius=stop_radius
+        None, KnnSpec(k, start_radius=start_radius, stop_radius=stop_radius)
     )
 
 
@@ -52,7 +52,9 @@ def oracle_baseline(pts, k):
     case for the baseline; real users would pick d >> maxDist).  Fresh grid
     per call, matching the one-shot TrueKNN measurement."""
     rmax = max_knn_distance(pts, k) * (1 + 1e-5)
-    return lambda: build_index(pts, backend="fixed_radius", radius=rmax).query(None, k)
+    return lambda: build_index(pts, backend="fixed_radius").query(
+        None, HybridSpec(k, rmax)
+    )
 
 
 def run_pair(name, pts, k, *, start_radius=None):

@@ -24,6 +24,7 @@ def main() -> None:
         bench_k,
         bench_kernel,
         bench_percentile,
+        bench_query_plans,
         bench_rounds,
         bench_start_radius,
         bench_work_counts,
@@ -49,6 +50,11 @@ def main() -> None:
     with open("BENCH_index.json", "w") as f:
         json.dump(index_summary, f, indent=2, default=str)
     print("# wrote BENCH_index.json", flush=True)
+    _section("query plans (QuerySpec v2: knn/range/hybrid x metrics)")
+    plans_summary = bench_query_plans.main()
+    with open("BENCH_query_plans.json", "w") as f:
+        json.dump(plans_summary, f, indent=2, default=str)
+    print("# wrote BENCH_query_plans.json", flush=True)
     _section("kernel microbench")
     bench_kernel.main()
     print(f"# total {time.time()-t0:.1f}s", flush=True)

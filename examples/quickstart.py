@@ -1,46 +1,84 @@
-"""Quickstart: build an unbounded-kNN index once, query it many times.
+"""Quickstart: build an index once, plan every query through a spec.
 
     PYTHONPATH=src python examples/quickstart.py
 
-The handle returned by ``build_index`` is the paper's workload shape made
-explicit: the structure is resident, queries stream through it, and search
-state (cached radius-lattice grids, warm-start radius) amortizes across
-calls.  Migration from the old free functions:
+``build_index`` makes the paper's workload shape explicit: the structure is
+resident, queries stream through it, and search state (cached radius-
+lattice grids, warm-start radius) amortizes across calls.  Since QuerySpec
+v2 the *question* is a typed value too:
 
-    trueknn(pts, k)                  -> build_index(pts).query(None, k)
-    trueknn(pts, k, queries=q)       -> index.query(q, k)
-    fixed_radius_knn(pts, r, k)      -> build_index(pts, backend="fixed_radius",
-                                                    radius=r).query(None, k)
-    brute_knn(pts, k)                -> build_index(pts, backend="brute").query(None, k)
+    KnnSpec(k)            unbounded k nearest (the paper's TrueKNN)
+    RangeSpec(r)          everything within r  -> ragged RangeResult (CSR)
+    HybridSpec(k, r)      k nearest, but never beyond r
+
+and the metric is a keyword: ``index.query(q, spec, metric="cosine")``.
+
+Migration from the PR-1 signature (deprecated, warns once per process):
+
+    index.query(q, k)                    -> index.query(q, KnnSpec(k))
+    index.query(q, k, radius=r0)         -> index.query(q, KnnSpec(k, start_radius=r0))
+    index.query(q, k, stop_radius=rs)    -> index.query(q, KnnSpec(k, stop_radius=rs))
+    trueknn(pts, k)                      -> build_index(pts).query(None, KnnSpec(k))
+    fixed_radius_knn(pts, r, k)          -> build_index(pts, backend="fixed_radius")
+                                               .query(None, HybridSpec(k, r))
+    brute_knn(pts, k)                    -> build_index(pts, backend="brute")
+                                               .query(None, KnnSpec(k))
 """
 
 import numpy as np
 
-from repro.api import available_backends, build_index
-
+from repro.api import (
+    HybridSpec,
+    KnnSpec,
+    RangeSpec,
+    available_backends,
+    available_metrics,
+    build_index,
+)
 from repro.core import make_dataset
 
 pts = make_dataset("porto", 20_000, seed=0)  # heavy-tailed 2D GPS-like cloud
 index = build_index(pts, backend="trueknn")  # structure is now resident
 
-# -- batch 1: the dataset queries itself (the paper's benchmark setting) -----
-res = index.query(None, k=5)
+# -- kNN: the dataset queries itself (the paper's benchmark setting) ---------
+res = index.query(None, KnnSpec(k=5))
 print(f"found 5-NN for all {len(pts)} points in {res.n_rounds} rounds")
 print(f"start radius {res.start_radius:.2e} -> final {res.final_radius:.2e}")
 print(f"candidate distance tests: {res.n_tests:,}")
 
 # -- the exact oracle agrees -------------------------------------------------
 oracle = build_index(pts, backend="brute")
-bres = oracle.query(None, k=5)
+bres = oracle.query(None, KnnSpec(k=5))
 print(f"brute force would test:   {bres.n_tests:,} "
       f"({bres.n_tests/res.n_tests:.0f}x more)")
 ok = np.allclose(np.sort(res.dists, 1), np.sort(bres.dists, 1),
                  rtol=1e-4, atol=1e-7)
 print(f"exact vs brute force: {ok}")
 
-# -- batch 2: new queries hit the warm index ---------------------------------
+# -- range search: ragged CSR answer on the same warm structure --------------
+r = float(np.median(res.dists[:, -1]))  # a radius most queries can fill
+rng = index.query(pts[:512], RangeSpec(radius=r))
+print(
+    f"range(r={r:.3g}): {rng.counts.sum():,} neighbors over 512 queries "
+    f"(row sizes {rng.counts.min()}..{rng.counts.max()}, "
+    f"CSR nnz={len(rng.idxs):,}, plan={rng.timings['plan']})"
+)
+
+# -- hybrid: top-k but never beyond the radius cap ---------------------------
+hyb = index.query(pts[:512], HybridSpec(k=5, radius=r / 4))
+dropped = int(np.isinf(hyb.dists).sum())
+print(f"hybrid(k=5, cap={r/4:.3g}): {dropped} of {512*5} slots beyond the cap")
+
+# -- pluggable metrics: same index, same specs, different distance -----------
+cos = index.query(pts[:256], KnnSpec(k=5), metric="cosine")
+print(
+    f"cosine 5-NN via {cos.timings.get('plan', 'native')} plan "
+    f"(grid machinery runs on the normalized companion cloud)"
+)
+
+# -- warm serving: new batches hit cached grids ------------------------------
 qs = pts[:256] + np.float32(0.001)
-res2 = index.query(qs, k=5)
+res2 = index.query(qs, KnnSpec(k=5))
 print(
     f"warm batch: {res2.n_rounds} rounds, "
     f"{res2.timings['grid_cache_hits']} cached grids reused, "
@@ -48,3 +86,4 @@ print(
     f"(start radius {res2.timings['start_radius_source']})"
 )
 print(f"registered backends: {available_backends()}")
+print(f"registered metrics:  {available_metrics()}")

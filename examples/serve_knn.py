@@ -15,7 +15,7 @@ import time
 
 import numpy as np
 
-from repro.api import build_index
+from repro.api import KnnSpec, build_index
 from repro.core import make_dataset
 
 ap = argparse.ArgumentParser()
@@ -42,7 +42,7 @@ for b in range(args.batches):
         scale=0.5, size=(args.batch_size, 3)
     ).astype(np.float32)
     t0 = time.perf_counter()
-    res = index.query(qs, args.k)
+    res = index.query(qs, KnnSpec(args.k))
     dt = time.perf_counter() - t0
     lat.append(dt)
     tm = res.timings

@@ -1,45 +1,74 @@
-"""Unified neighbor-search API: build once, query many.
+"""Unified neighbor-search API: build once, plan every query.
 
 The paper's workload shape — structure resident, queries stream in, the
 search space grows until every query resolves — maps to two calls::
 
-    from repro.api import build_index
+    from repro.api import build_index, KnnSpec, RangeSpec, HybridSpec
 
-    index = build_index(points, backend="trueknn")   # build (resident)
-    res = index.query(batch_a, k=8)                   # KNNResult
-    res = index.query(batch_b, k=8)                   # reuses cached grids,
-                                                      # warm-starts the radius
+    index = build_index(points, backend="trueknn")    # build (resident)
+    res = index.query(batch_a, KnnSpec(k=8))          # KNNResult
+    rng = index.query(batch_b, RangeSpec(radius=0.5)) # RangeResult (CSR)
+    cap = index.query(batch_c, HybridSpec(8, 0.5))    # kNN, radius-capped
 
-Every backend returns the same ``KNNResult`` (dists, idxs, n_tests, rounds,
-timings), and backends are registered by name so new engines plug in
-without touching call sites::
+Three orthogonal registries make the surface grow additively:
 
-    @register_backend("my_engine")
-    class MyIndex(NeighborIndex):
-        def query(self, queries, k, *, radius=None, stop_radius=None): ...
+* **backends** (``@register_backend``) — who answers: brute /
+  fixed_radius / trueknn / distributed, or your engine.
+* **specs** (``repro.api.query``) — what is asked: kNN, range, hybrid.
+  A thin planner routes each spec to the backend's native ``execute_*``
+  hook, or to a generic plan (knn-then-filter, counted/oversized-k
+  sweeps) when the backend has no fast path — so every (spec, backend)
+  pair answers correctly today and can be made fast later.
+* **metrics** (``@register_metric``) — in which distance: l2 / l1 / linf /
+  cosine.  Metrics with an exact monotone L2 reduction (cosine) ride the
+  grid machinery through a transformed companion cloud (the Arkade
+  trick); the rest use the fused VPU forms or the exact dense engines.
 
-Migration from the pre-index free functions (kept as deprecated shims):
+kNN/hybrid answers share ``KNNResult`` (dists, idxs, found, rounds,
+timings); range answers are ragged and come back as ``RangeResult`` in CSR
+layout (``offsets``/``idxs``/``dists``, rows nearest-first).
 
-    trueknn(pts, k, ...)            -> build_index(pts).query(None, k, ...)
-    trueknn(pts, k, queries=q)      -> build_index(pts).query(q, k)
-    fixed_radius_knn(pts, r, k)     -> build_index(pts, backend="fixed_radius",
-                                                   radius=r).query(None, k)
-    brute_knn(pts, k, queries=q)    -> build_index(pts, backend="brute").query(q, k)
+Deprecated (warn once per process, removed in a future PR):
 
-The shims rebuild state per call; hold an index instead wherever more than
-one batch is served (see examples/serve_knn.py and
-benchmarks/bench_index_reuse.py for the measured difference).
+    index.query(q, k, radius=..., stop_radius=...)   # PR-1 signature
+        -> index.query(q, KnnSpec(k, start_radius=..., stop_radius=...))
+    trueknn(pts, k, ...)          -> build_index(pts).query(None, KnnSpec(k))
+    fixed_radius_knn(pts, r, k)   -> build_index(pts, backend="fixed_radius")
+                                        .query(None, HybridSpec(k, r))
+    brute_knn(pts, k, queries=q)  -> build_index(pts, backend="brute")
+                                        .query(q, KnnSpec(k))
+
+See docs/api.md for the full migration table and the RangeResult layout.
 """
 
-from repro.core.result import KNNResult, RoundStats
+from repro.core.result import KNNResult, RangeResult, RoundStats
 
-from . import backends  # registers the built-in backends
+from .metrics import (
+    Metric,
+    available_metrics,
+    get_metric,
+    normalize_rows,
+    register_metric,
+)
+from .query import HybridSpec, KnnSpec, QuerySpec, RangeSpec
+
+from . import backends  # registers the built-in backends  # noqa: E402
 from .index import NeighborIndex, build_index
 from .registry import available_backends, get_backend, register_backend
 
 __all__ = [
     "KNNResult",
+    "RangeResult",
     "RoundStats",
+    "QuerySpec",
+    "KnnSpec",
+    "RangeSpec",
+    "HybridSpec",
+    "Metric",
+    "register_metric",
+    "get_metric",
+    "available_metrics",
+    "normalize_rows",
     "NeighborIndex",
     "build_index",
     "available_backends",

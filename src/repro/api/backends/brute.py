@@ -3,20 +3,26 @@
 Wraps the chunked jit-compiled engine in ``repro.core.brute``; "building"
 the index is just pinning the cloud, but repeated queries still amortize
 jit compilation across batches (shapes are stable per batch size).
+
+Every registered metric is native here (the dense engines dispatch on the
+metric tag), and range queries run on the fused Pallas kernel's in-radius
+counter — the counts are exact ball populations, so a range answer costs
+at most two kernel passes.
 """
 
 from __future__ import annotations
 
 import time
-from typing import Optional
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.brute import brute_knn_engine
-from repro.core.result import KNNResult
+from repro.core.result import KNNResult, RangeResult
 
 from ..index import NeighborIndex
+from ..metrics import Metric
+from ..query import HybridSpec, KnnSpec, RangeSpec
 from ..registry import register_backend
 
 __all__ = ["BruteIndex"]
@@ -29,48 +35,64 @@ class BruteIndex(NeighborIndex):
     cfg: ``chunk`` (query tile, default 512).
     """
 
+    native_metrics = frozenset({"l2", "l1", "linf", "cosine"})
+    knn_start_radius_semantics = "bound"  # no schedule: it's a post-filter
+
     def __init__(self, points, *, chunk: int = 512):
         super().__init__(points)
         self._chunk = int(chunk)
         self._pts_j = jnp.asarray(self._pts)  # device-resident for the life
         self._queries_served = 0
 
-    def query(
-        self,
-        queries,
-        k: int,
-        *,
-        radius: Optional[float] = None,
-        stop_radius: Optional[float] = None,
-    ) -> KNNResult:
-        if stop_radius is not None:
-            raise ValueError("brute backend has no radius schedule; "
-                             "stop_radius is not meaningful here")
+    def _knn(self, queries, k: int, metric: Metric, *, cut=None):
         t0 = time.perf_counter()
         d, i, n_tests = brute_knn_engine(
-            self._pts_j, k, queries=queries, chunk=self._chunk
+            self._pts_j, k, queries=queries, chunk=self._chunk,
+            metric=metric.kernel_name,
         )
         dists = np.asarray(d)
         idxs = np.asarray(i)
         found = None
-        if radius is not None:
-            # convenience post-filter: drop beyond-radius hits.  NOTE: the
-            # engine only surfaces the top-k, so ``found`` here counts
-            # in-radius neighbors among those k (capped at k) — unlike the
-            # fixed_radius backend, whose grid round counts the full ball.
-            within = dists <= radius
-            found = within.sum(1).astype(np.int64)
-            dists = np.where(within, dists, np.inf).astype(np.float32)
-            idxs = np.where(within, idxs, self.n_points).astype(np.int32)
+        if cut is not None:
+            # radius cap: drop beyond-radius hits.  NOTE: the engine only
+            # surfaces the top-k, so ``found`` counts in-radius neighbors
+            # among those k (capped at k) — the full ball population comes
+            # from the range path's kernel counter instead.
+            from ..planner import apply_radius_cut
+
+            dists, idxs, found = apply_radius_cut(
+                dists, idxs, cut, self.n_points
+            )
         self._queries_served += dists.shape[0]
         return KNNResult(
             dists=dists,
             idxs=idxs,
             n_tests=int(n_tests),
             backend=self.backend_name,
+            metric=metric.name,
             found=found,
             timings={"query_seconds": time.perf_counter() - t0},
         )
+
+    def execute_knn(self, queries, spec: KnnSpec, metric: Metric) -> KNNResult:
+        if spec.stop_radius is not None:
+            raise ValueError("brute backend has no radius schedule; "
+                             "stop_radius is not meaningful here")
+        # start_radius on a schedule-free engine: convenience post-filter
+        # (backend-defined semantics, same as PR 1's ``radius=``).
+        return self._knn(queries, spec.k, metric, cut=spec.start_radius)
+
+    def execute_hybrid(self, queries, spec: HybridSpec, metric: Metric):
+        return self._knn(queries, spec.k, metric, cut=spec.radius)
+
+    def execute_range(self, queries, spec: RangeSpec, metric: Metric):
+        from ..planner import range_via_counted_topk
+
+        res = range_via_counted_topk(
+            self._pts, queries, spec, metric, backend=self.backend_name
+        )
+        self._queries_served += res.n_queries
+        return res
 
     def stats(self) -> dict:
         s = super().stats()

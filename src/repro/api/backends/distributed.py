@@ -19,6 +19,8 @@ import numpy as np
 from repro.core.result import KNNResult
 
 from ..index import NeighborIndex
+from ..metrics import Metric
+from ..query import KnnSpec
 from ..registry import register_backend
 
 __all__ = ["DistributedIndex"]
@@ -67,15 +69,10 @@ class DistributedIndex(NeighborIndex):
         self._queries_served = 0
         self._batches = 0
 
-    def query(
-        self,
-        queries,
-        k: int,
-        *,
-        radius: Optional[float] = None,
-        stop_radius: Optional[float] = None,
-    ) -> KNNResult:
-        if stop_radius is not None:
+    def execute_knn(self, queries, spec: KnnSpec, metric: Metric) -> KNNResult:
+        """Native kNN over the sharded cloud (L2 only; range/hybrid specs
+        and reducible metrics arrive through the planner's generic plans)."""
+        if spec.stop_radius is not None:
             raise ValueError(
                 "distributed backend does not implement stop_radius yet; "
                 "use backend='trueknn'"
@@ -83,6 +80,8 @@ class DistributedIndex(NeighborIndex):
         from repro.core.distributed import distributed_trueknn
         from repro.core.sampling import sample_start_radius
 
+        k = spec.k
+        radius = spec.start_radius
         t0 = time.perf_counter()
         if radius is None:
             # Alg.-2 sampling depends only on the resident cloud: pay it once
@@ -107,6 +106,7 @@ class DistributedIndex(NeighborIndex):
             idxs=np.asarray(idxs),
             n_tests=0,  # the sharded engine doesn't meter per-pair work
             backend=self.backend_name,
+            metric=metric.name,
             timings={
                 "query_seconds": time.perf_counter() - t0,
                 "mesh_rounds": rounds,

@@ -4,6 +4,13 @@ Build-once matters here: the hash grid for a given radius is built on first
 use and cached on the index, so serving many batches at the same radius
 pays binning exactly once (the free-function ``fixed_radius_knn`` rebuilt
 it every call).
+
+This backend is the natural home of ``RangeSpec`` and ``HybridSpec``: one
+grid round already returns the k best *within the ball* plus the exact
+in-ball count, so hybrid is a single round and range is at most two (the
+second sized by the counts).  ``KnnSpec`` needs a radius (cfg default or
+``start_radius``) and answers with fixed-radius semantics — it cannot grow
+the ball; use the trueknn backend for unbounded search.
 """
 
 from __future__ import annotations
@@ -19,6 +26,8 @@ from repro.core.grid import build_grid
 from repro.core.result import KNNResult, RoundStats
 
 from ..index import NeighborIndex
+from ..metrics import Metric
+from ..query import HybridSpec, KnnSpec, RangeSpec
 from ..registry import register_backend
 
 __all__ = ["FixedRadiusIndex"]
@@ -28,11 +37,14 @@ __all__ = ["FixedRadiusIndex"]
 class FixedRadiusIndex(NeighborIndex):
     """Single-round search within an exact radius ball.
 
-    cfg: ``radius`` (default search radius; ``query(radius=...)`` overrides
-    per call), ``chunk`` (query tile, default 2048), ``max_cached_grids``
-    (LRU bound on per-radius grids so per-request radii can't grow device
-    memory without limit; default 16).
+    cfg: ``radius`` (default search radius; specs carrying their own radius
+    override per call), ``chunk`` (query tile, default 2048),
+    ``max_cached_grids`` (LRU bound on per-radius grids so per-request
+    radii can't grow device memory without limit; default 16).
     """
+
+    radius_cfg_keys = ("radius",)  # metric-space: mapped for metric views
+    knn_start_radius_semantics = "bound"  # KnnSpec searches exactly this ball
 
     def __init__(self, points, *, radius: Optional[float] = None,
                  chunk: int = 2048, max_cached_grids: int = 16):
@@ -59,29 +71,16 @@ class FixedRadiusIndex(NeighborIndex):
             self._grids.pop(next(iter(self._grids)))
         return g, False
 
-    def query(
-        self,
-        queries,
-        k: int,
-        *,
-        radius: Optional[float] = None,
-        stop_radius: Optional[float] = None,
-    ) -> KNNResult:
-        if stop_radius is not None:
-            raise ValueError("fixed_radius backend searches one radius; "
-                             "use backend='trueknn' for stop_radius")
-        r = radius if radius is not None else self._default_radius
-        if r is None:
-            raise ValueError("fixed_radius backend needs a radius — pass "
-                             "build_index(..., radius=r) or query(radius=r)")
+    def _queries_and_ids(self, queries):
+        if queries is None:
+            return self._pts, np.arange(self.n_points, dtype=np.int32)
+        q = np.asarray(queries, np.float32)
+        return q, np.full((q.shape[0],), self.n_points, np.int32)
+
+    def _one_round(self, queries, k: int, r: float, metric: Metric) -> KNNResult:
         r = float(r)
         t0 = time.perf_counter()
-        if queries is None:
-            q = self._pts
-            qid = np.arange(self.n_points, dtype=np.int32)
-        else:
-            q = np.asarray(queries, np.float32)
-            qid = np.full((q.shape[0],), self.n_points, np.int32)
+        q, qid = self._queries_and_ids(queries)
         grid, hit = self._grid_for(r)
         t_grid = time.perf_counter() - t0
         d2, idx, found, n_tests = fixed_radius_round(
@@ -94,6 +93,7 @@ class FixedRadiusIndex(NeighborIndex):
             idxs=np.asarray(idx),
             n_tests=int(n_tests),
             backend=self.backend_name,
+            metric=metric.name,
             found=found,
             rounds=[RoundStats(0, r, q.shape[0], int((found >= k).sum()),
                                int(n_tests), grid.res, grid.cap, dt,
@@ -106,6 +106,66 @@ class FixedRadiusIndex(NeighborIndex):
             },
             start_radius=r,
             final_radius=r,
+        )
+
+    def knn_spec_radius_cut(self, spec: KnnSpec):
+        # KnnSpec searches exactly one ball here: the spec's radius or the
+        # cfg default.  Generic metric plans apply the same bound so the
+        # spec means one thing on this backend under every metric.
+        r = (
+            spec.start_radius
+            if spec.start_radius is not None
+            else self._default_radius
+        )
+        if r is None:
+            raise ValueError(
+                "fixed_radius backend needs a radius — pass "
+                "build_index(..., radius=r), KnnSpec(k, start_radius=r) or "
+                "HybridSpec(k, r)"
+            )
+        return float(r)
+
+    def execute_knn(self, queries, spec: KnnSpec, metric: Metric) -> KNNResult:
+        if spec.stop_radius is not None:
+            raise ValueError("fixed_radius backend searches one radius; "
+                             "use backend='trueknn' for stop_radius")
+        return self._one_round(
+            queries, spec.k, self.knn_spec_radius_cut(spec), metric
+        )
+
+    def execute_hybrid(self, queries, spec: HybridSpec, metric: Metric):
+        # hybrid IS this backend's native shape: k best within the ball
+        return self._one_round(queries, spec.k, spec.radius, metric)
+
+    def execute_range(self, queries, spec: RangeSpec, metric: Metric):
+        from ..planner import range_from_counted_round
+
+        q, qid = self._queries_and_ids(queries)
+        grid, hit = self._grid_for(float(spec.radius))
+
+        def round_fn(k):
+            d2, idx, found, n_tests = fixed_radius_round(
+                self._pts_j, grid, q, qid, float(spec.radius), int(k),
+                chunk=self._chunk,
+            )
+            return (
+                np.sqrt(np.asarray(d2)),
+                np.asarray(idx),
+                np.asarray(found),
+                n_tests,
+            )
+
+        return range_from_counted_round(
+            round_fn,
+            q_total=q.shape[0],
+            cap=self.n_points - (1 if queries is None else 0),
+            spec=spec,
+            backend=self.backend_name,
+            timings_extra={
+                "plan": "native",
+                "grid_builds": 0 if hit else 1,
+                "grid_cache_hits": 1 if hit else 0,
+            },
         )
 
     def stats(self) -> dict:

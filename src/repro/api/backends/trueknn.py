@@ -44,6 +44,8 @@ from repro.core.result import KNNResult, RoundStats
 from repro.core.sampling import sample_start_radius
 
 from ..index import NeighborIndex
+from ..metrics import Metric
+from ..query import HybridSpec, KnnSpec, RangeSpec
 from ..registry import register_backend
 
 __all__ = ["TrueKNNIndex"]
@@ -71,10 +73,15 @@ class TrueKNNIndex(NeighborIndex):
                    a normal radius schedule spans O(log(extent/r0)) lattice
                    points, well under the bound).
 
-    ``query(radius=...)`` overrides the start radius explicitly (the old
-    ``trueknn(start_radius=...)``); ``query(stop_radius=...)`` is the
-    paper's Sec. 5.5.1 early termination — tail queries keep the partial
-    (< k) neighbor lists they found, with ``found`` recording how many.
+    ``KnnSpec(start_radius=...)`` overrides the start radius explicitly
+    (the old ``trueknn(start_radius=...)``); ``KnnSpec(stop_radius=...)``
+    is the paper's Sec. 5.5.1 early termination — tail queries keep the
+    partial (< k) neighbor lists they found, with ``found`` recording how
+    many.  ``HybridSpec(k, r)`` runs the same driver with the cap searched
+    *exactly* (the final round's radius is the cap itself, so no neighbor
+    inside it is missed — unlike stop_radius, which only bounds the
+    schedule).  ``RangeSpec(r)`` is a single counted round on the
+    lattice-snapped cached grid.
     """
 
     def __init__(
@@ -184,13 +191,83 @@ class TrueKNNIndex(NeighborIndex):
 
     # -- the hot path ------------------------------------------------------
 
-    def query(
+    def execute_knn(self, queries, spec: KnnSpec, metric: Metric) -> KNNResult:
+        return self._run_knn(
+            queries,
+            spec.k,
+            radius=spec.start_radius,
+            stop_radius=spec.stop_radius,
+            metric_name=metric.name,
+        )
+
+    def execute_hybrid(self, queries, spec: HybridSpec, metric: Metric):
+        # same driver, but the cap is searched exactly: the last round's
+        # radius is spec.radius itself, so hybrid answers match
+        # knn-then-filter bit-for-bit (modulo ties) at multi-round cost.
+        return self._run_knn(
+            queries,
+            spec.k,
+            radius=None,
+            stop_radius=spec.radius,
+            cap_exact=True,
+            metric_name=metric.name,
+        )
+
+    def execute_range(self, queries, spec: RangeSpec, metric: Metric):
+        from ..planner import range_from_counted_round
+
+        r = float(spec.radius)
+        if self._anchor is None:
+            # range-first indexes anchor the lattice at the first radius
+            self._set_anchor(max(r, 1e-12))
+        n, d = self._pts.shape
+        if queries is None:
+            q = self._pts
+            qid = np.arange(n, dtype=np.int32)
+        else:
+            q = np.asarray(queries, np.float32)
+            qid = np.full((q.shape[0],), n, np.int32)
+        t0 = time.perf_counter()
+        grid, hit = self._grid_for(r)  # lattice-snapped: cell size >= r
+        t_grid = time.perf_counter() - t0
+        self._c["batches"] += 1
+        self._c["queries_served"] += q.shape[0]
+
+        def round_fn(k):
+            d2, idx, found, n_tests = fixed_radius_round(
+                self._pts_j, grid, q, qid, r, int(k), chunk=self._chunk
+            )
+            self._c["rounds"] += 1
+            return (
+                np.sqrt(np.asarray(d2)),
+                np.asarray(idx),
+                np.asarray(found),
+                n_tests,
+            )
+
+        return range_from_counted_round(
+            round_fn,
+            q_total=q.shape[0],
+            cap=n - (1 if queries is None else 0),
+            spec=spec,
+            backend=self.backend_name,
+            timings_extra={
+                "plan": "native",
+                "grid_builds": 0 if hit else 1,
+                "grid_cache_hits": 1 if hit else 0,
+                "grid_build_seconds": 0.0 if hit else t_grid,
+            },
+        )
+
+    def _run_knn(
         self,
         queries,
         k: int,
         *,
         radius: Optional[float] = None,
         stop_radius: Optional[float] = None,
+        cap_exact: bool = False,
+        metric_name: str = "l2",
     ) -> KNNResult:
         t_call = time.perf_counter()
         n, d = self._pts.shape
@@ -232,8 +309,19 @@ class TrueKNNIndex(NeighborIndex):
         force_brute_tail = False
         clamp_r = 4.0 * self._extent
         while alive.size and ridx < self._max_rounds:
-            if stop_radius is not None and r > stop_radius:
-                break
+            at_cap = False
+            if stop_radius is not None:
+                if cap_exact:
+                    # hybrid cap: the boundary round searches exactly the
+                    # cap radius (never skips past it), so every in-cap
+                    # neighbor is surfaced.  Jump straight to the cap on
+                    # the last budgeted round too — exactness beats
+                    # schedule aesthetics.
+                    if r >= stop_radius or ridx == self._max_rounds - 1:
+                        r = float(stop_radius)
+                        at_cap = True
+                elif r > stop_radius:
+                    break
             t0 = time.perf_counter()
             grid, hit = self._grid_for(r)
             t_build += 0.0 if hit else time.perf_counter() - t0
@@ -275,6 +363,11 @@ class TrueKNNIndex(NeighborIndex):
             )
             ridx += 1
 
+            if at_cap:
+                # hybrid boundary round done: alive queries hold their
+                # complete in-cap neighbor sets (found < k), by design
+                break
+
             # Guard: a single-cell grid whose radius covers the cloud
             # diagonal makes the round a brute-force pass over all points.
             # If queries still failed to resolve, growing the radius cannot
@@ -299,9 +392,22 @@ class TrueKNNIndex(NeighborIndex):
             bd, bi, btests = brute_knn_engine(
                 self._pts_j, k, queries=q_all[alive], query_ids=qid_all[alive]
             )
-            out_d[alive] = np.asarray(bd)
-            out_i[alive] = np.asarray(bi)
-            found_all[alive] = k
+            bd = np.asarray(bd)
+            bi = np.asarray(bi)
+            if cap_exact:
+                # the tail is UNBOUNDED kNN; re-impose the hybrid cap so
+                # neighbors beyond spec.radius are never reported (the
+                # brute-equivalent guard can fire below the cap radius)
+                from ..planner import apply_radius_cut
+
+                bd, bi, bfound = apply_radius_cut(bd, bi, stop_radius, n)
+                found_all[alive] = bfound
+            else:
+                # honest count: k in the usual case, fewer when k exceeds
+                # the cloud (the engine inf-pads past N-1 real neighbors)
+                found_all[alive] = np.isfinite(bd).sum(1)
+            out_d[alive] = bd
+            out_i[alive] = bi
             total_tests += int(btests)
             self._c["brute_tail_queries"] += int(alive.size)
             rounds.append(
@@ -335,6 +441,7 @@ class TrueKNNIndex(NeighborIndex):
             idxs=out_i,
             n_tests=total_tests,
             backend=self.backend_name,
+            metric=metric_name,
             found=found_all,
             rounds=rounds,
             timings={

@@ -1,0 +1,427 @@
+"""The query planner: one routing layer between specs and backend engines.
+
+``NeighborIndex.query`` hands every call here.  The planner
+
+1. resolves the metric and validates the spec,
+2. routes native work to the backend's ``execute_*`` hook
+   (``execute_knn`` always exists; ``execute_range`` / ``execute_hybrid``
+   may raise ``NotImplementedError``),
+3. covers every gap with a *generic plan*, so a (spec, metric, backend)
+   triple is never "unsupported", only "not yet fast":
+
+   * hybrid without a native path      -> knn-then-filter,
+   * range without a native path       -> oversized-k hybrid sweep (double
+     k until each query's ball is provably exhausted),
+   * metric with an exact monotone L2 reduction (cosine) on an L2-only
+     backend -> search a companion index over the transformed cloud and
+     map distances back at the boundary (the Arkade trick; grids, round
+     schedules and warm-start state all live in transformed space),
+   * metric with neither (L1 / L∞ on grid engines) -> the exact
+     metric-aware brute engine.
+
+Generic plans tag ``result.timings["plan"]`` so benchmarks and tests can
+see which path answered.  Native paths carry no tag (or "native").
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core.grid import _next_pow2
+from repro.core.result import KNNResult, RangeResult
+
+from .metrics import Metric, get_metric
+from .query import HybridSpec, KnnSpec, QuerySpec, RangeSpec
+
+__all__ = [
+    "execute",
+    "apply_radius_cut",
+    "range_from_counted_round",
+    "range_via_counted_topk",
+]
+
+_L2 = "l2"
+
+
+def apply_radius_cut(dists, idxs, cut: float, sentinel: int):
+    """THE radius-cap post-filter (hybrid plans, brute ``start_radius``
+    bounds, the trueknn hybrid brute tail all share it): beyond-cut slots
+    become inf/sentinel, ``found`` counts the survivors per row.  Boundary
+    is inclusive (``<= cut``), matching every engine's in-radius test."""
+    dists = np.asarray(dists)
+    idxs = np.asarray(idxs)
+    within = dists <= cut
+    found = within.sum(1).astype(np.int64)
+    return (
+        np.where(within, dists, np.inf).astype(np.float32),
+        np.where(within, idxs, sentinel).astype(np.int32),
+        found,
+    )
+
+
+def execute(index, queries, spec: QuerySpec, metric_name: str):
+    """Plan and run ``spec`` on ``index``; returns KNNResult or RangeResult."""
+    metric = get_metric(metric_name)
+    spec.validate()
+    if metric.name in index.native_metrics:
+        return _dispatch(index, queries, spec, metric)
+    if metric.has_l2_view and _L2 in index.native_metrics:
+        return _via_l2_view(index, queries, spec, metric)
+    return _brute_plan(index, queries, spec, metric)
+
+
+def _dispatch(index, queries, spec, metric: Metric):
+    """Native hook, or generic plan where the hook is missing."""
+    if isinstance(spec, KnnSpec):
+        return index.execute_knn(queries, spec, metric)
+    if isinstance(spec, RangeSpec):
+        try:
+            return index.execute_range(queries, spec, metric)
+        except NotImplementedError:
+            return _range_via_knn(index, queries, spec, metric)
+    if isinstance(spec, HybridSpec):
+        try:
+            return index.execute_hybrid(queries, spec, metric)
+        except NotImplementedError:
+            return _hybrid_via_knn(index, queries, spec, metric)
+    raise TypeError(f"unknown QuerySpec kind: {type(spec).__name__}")
+
+
+# -- generic plan: hybrid = knn then filter ---------------------------------
+
+
+def _hybrid_via_knn(index, queries, spec: HybridSpec, metric: Metric):
+    res = index.execute_knn(queries, KnnSpec(spec.k), metric)
+    res.dists, res.idxs, res.found = apply_radius_cut(
+        res.dists, res.idxs, spec.radius, index.n_points
+    )
+    res.timings["plan"] = "knn_filter"
+    return res
+
+
+# -- generic plan: range = oversized-k hybrid sweep -------------------------
+
+
+def _empty_range(q_total, spec, backend, metric_name, timings=None):
+    return RangeResult(
+        offsets=np.zeros((q_total + 1,), np.int64),
+        idxs=np.empty((0,), np.int32),
+        dists=np.empty((0,), np.float32),
+        radius=spec.radius,
+        backend=backend,
+        metric=metric_name,
+        truncated=(
+            np.zeros((q_total,), bool) if spec.max_neighbors else None
+        ),
+        timings=timings or {},
+    )
+
+
+def _csr_from_rows(rows_i, rows_d, spec, *, n_tests, backend, metric_name,
+                   truncated, timings):
+    offsets = np.zeros((len(rows_i) + 1,), np.int64)
+    for i, r in enumerate(rows_i):
+        offsets[i + 1] = offsets[i] + (0 if r is None else len(r))
+    idxs = (
+        np.concatenate([r for r in rows_i if r is not None and len(r)])
+        if offsets[-1]
+        else np.empty((0,), np.int32)
+    ).astype(np.int32)
+    dists = (
+        np.concatenate([r for r in rows_d if r is not None and len(r)])
+        if offsets[-1]
+        else np.empty((0,), np.float32)
+    ).astype(np.float32)
+    return RangeResult(
+        offsets=offsets,
+        idxs=idxs,
+        dists=dists,
+        radius=spec.radius,
+        n_tests=int(n_tests),
+        backend=backend,
+        metric=metric_name,
+        truncated=truncated,
+        timings=timings,
+    )
+
+
+def _range_via_knn(index, queries, spec: RangeSpec, metric: Metric):
+    """Oversized-k sweep: run radius-capped kNN with growing k until every
+    query's ball is provably exhausted (``got < k``) or its row cap is
+    met.  Works on any backend that answers kNN — the completeness test
+    needs only the returned distances, never backend-specific counters."""
+    t0 = time.perf_counter()
+    n = index.n_points
+    self_query = queries is None
+    q_all = None if self_query else np.asarray(queries, np.float32)
+    q_total = n if self_query else q_all.shape[0]
+    cap = (n - 1) if self_query else n
+    maxn = spec.max_neighbors
+    target = min(maxn, cap) if maxn else cap
+    timings = {"plan": "knn_sweep"}
+    if q_total == 0 or cap == 0:
+        timings["query_seconds"] = time.perf_counter() - t0
+        return _empty_range(q_total, spec, index.backend_name, metric.name,
+                            timings)
+
+    rows_i = [None] * q_total
+    rows_d = [None] * q_total
+    truncated = np.zeros((q_total,), bool) if maxn else None
+    pending = np.arange(q_total)
+    # k > target wherever possible, so "got < k" proves the ball exhausted
+    # and row truncation is decided exactly, not guessed.
+    k = min(max((maxn + 1) if maxn else 32, 2), cap)
+    total_tests = 0
+    sweeps = 0
+    while pending.size:
+        sweeps += 1
+        sub = None if self_query else q_all[pending]
+        res = _dispatch(index, sub, HybridSpec(k, spec.radius), metric)
+        total_tests += int(res.n_tests)
+        d = np.asarray(res.dists)
+        ix = np.asarray(res.idxs)
+        got = np.isfinite(d).sum(1).astype(np.int64)
+        complete = (got < k) | (k >= cap)
+        glob = np.arange(q_total) if self_query else pending
+        for li in np.flatnonzero(complete):
+            gi = int(glob[li])
+            m = int(min(got[li], target))
+            rows_d[gi] = d[li, :m]
+            rows_i[gi] = ix[li, :m]
+            if truncated is not None:
+                truncated[gi] = got[li] > target
+        incomplete = ~complete
+        pending = (
+            np.flatnonzero(incomplete) if self_query else pending[incomplete]
+        )
+        if pending.size:
+            hint = None
+            if res.found is not None:
+                fmax = int(np.asarray(res.found)[incomplete].max())
+                hint = fmax + 1  # need k strictly above the count for proof
+            k = min(_next_pow2(max(hint or 0, k * 2)), cap)
+    timings.update(sweeps=sweeps, final_k=k,
+                   query_seconds=time.perf_counter() - t0)
+    return _csr_from_rows(
+        rows_i, rows_d, spec, n_tests=total_tests,
+        backend=index.backend_name, metric_name=metric.name,
+        truncated=truncated, timings=timings,
+    )
+
+
+# -- shared native-range helpers -------------------------------------------
+
+
+def range_from_counted_round(
+    round_fn: Callable,
+    *,
+    q_total: int,
+    cap: int,
+    spec: RangeSpec,
+    backend: str,
+    metric_name: str = _L2,
+    timings_extra: Optional[dict] = None,
+):
+    """Range search through a *counted* fixed-radius round.
+
+    ``round_fn(k) -> (dists (Q,k) metric-space ascending, idxs (Q,k),
+    found (Q,) exact in-ball counts, n_tests)``.  Because ``found`` is the
+    exact ball population (the kernels' in-radius counter), at most one
+    re-run with ``k = found.max()`` surfaces every neighbor — this is the
+    native ``RangeSpec`` engine for the grid backends and the Pallas
+    kernel path.
+    """
+    t0 = time.perf_counter()
+    maxn = spec.max_neighbors
+    target = min(maxn, cap) if maxn else cap
+    timings = dict(timings_extra or {})
+    timings.setdefault("plan", "native")
+    if q_total == 0 or cap == 0:
+        timings["query_seconds"] = time.perf_counter() - t0
+        return _empty_range(q_total, spec, backend, metric_name, timings)
+    k0 = min(max((maxn + 1) if maxn else 32, 2), cap)
+    d, ix, found, n_tests = round_fn(k0)
+    found = np.asarray(found).astype(np.int64)
+    total_tests = int(n_tests)
+    kneed = int(min(found.max() if found.size else 0, target))
+    rounds = 1
+    if kneed > k0:
+        d, ix, _, n_tests = round_fn(min(_next_pow2(kneed), cap))
+        total_tests += int(n_tests)
+        rounds += 1
+    d = np.asarray(d)
+    ix = np.asarray(ix)
+    take = np.minimum(found, target)
+    # vectorized CSR: row-major boolean masking preserves row order and the
+    # engines' nearest-first order within each row (no Python per-row loop
+    # on this hot path)
+    keep = np.arange(d.shape[1])[None, :] < take[:, None]
+    offsets = np.zeros((q_total + 1,), np.int64)
+    np.cumsum(take, out=offsets[1:])
+    truncated = (found > target) if maxn else None
+    timings.update(count_rounds=rounds,
+                   query_seconds=time.perf_counter() - t0)
+    return RangeResult(
+        offsets=offsets,
+        idxs=ix[keep].astype(np.int32),
+        dists=d[keep].astype(np.float32),
+        radius=spec.radius,
+        n_tests=int(total_tests),
+        backend=backend,
+        metric=metric_name,
+        truncated=truncated,
+        timings=timings,
+    )
+
+
+def range_via_counted_topk(points, queries, spec: RangeSpec, metric: Metric,
+                           *, backend: str):
+    """Native range plan on the fused Pallas kernel: its in-radius counter
+    returns exact ball populations, so the dense path needs at most two
+    passes.  Used by the brute backend and the generic metric fallback."""
+    from repro.kernels.ops import pairwise_topk
+
+    pts = np.asarray(points, np.float32)
+    n = pts.shape[0]
+    if queries is None:
+        q = pts
+        qid = np.arange(n, dtype=np.int32)
+        cap = n - 1
+    else:
+        q = np.asarray(queries, np.float32)
+        qid = None
+        cap = n
+
+    def round_fn(k):
+        d, ix, counts = pairwise_topk(
+            q, pts, int(k), radius=spec.radius, query_ids=qid,
+            metric=metric.name,
+        )
+        d = np.asarray(d)
+        if metric.name == _L2:
+            d = np.sqrt(d)  # kernel returns squared distances for l2
+        return d, np.asarray(ix), np.asarray(counts), q.shape[0] * n
+
+    return range_from_counted_round(
+        round_fn,
+        q_total=q.shape[0],
+        cap=cap,
+        spec=spec,
+        backend=backend,
+        metric_name=metric.name,
+        timings_extra={"plan": "counted_topk"},
+    )
+
+
+# -- generic plan: exact monotone L2 reduction (companion view) -------------
+
+
+def _transform_spec(spec, metric: Metric):
+    r2l = metric.radius_to_l2
+    if isinstance(spec, KnnSpec):
+        return KnnSpec(
+            spec.k,
+            start_radius=(
+                r2l(spec.start_radius) if spec.start_radius is not None else None
+            ),
+            stop_radius=(
+                r2l(spec.stop_radius) if spec.stop_radius is not None else None
+            ),
+        )
+    if isinstance(spec, RangeSpec):
+        return RangeSpec(r2l(spec.radius), max_neighbors=spec.max_neighbors)
+    if isinstance(spec, HybridSpec):
+        return HybridSpec(spec.k, r2l(spec.radius))
+    raise TypeError(type(spec).__name__)
+
+
+def _via_l2_view(index, queries, spec, metric: Metric):
+    """Serve a reducible metric through an L2 backend: search the companion
+    index over the transformed cloud, map distances/radii back at the
+    boundary.  Per-round telemetry (``rounds``) stays in engine (L2)
+    units."""
+    view = index.metric_view(metric)
+    tq = (
+        None
+        if queries is None
+        else metric.transform_points(np.asarray(queries, np.float32))
+    )
+    res = _dispatch(view, tq, _transform_spec(spec, metric), get_metric(_L2))
+    back = metric.dist_from_l2
+    res.metric = metric.name
+    res.backend = index.backend_name
+    res.timings["plan"] = "l2_view"
+    if isinstance(res, RangeResult):
+        res.dists = np.asarray(back(np.asarray(res.dists)), np.float32)
+        res.radius = spec.radius
+        return res
+    res.dists = np.asarray(back(np.asarray(res.dists)), np.float32)
+    if res.start_radius is not None:
+        res.start_radius = float(back(np.float64(res.start_radius)))
+    if res.final_radius is not None:
+        res.final_radius = float(back(np.float64(res.final_radius)))
+    return res
+
+
+# -- generic plan: exact metric-aware brute engine --------------------------
+
+
+def _brute_plan(index, queries, spec, metric: Metric):
+    """Last-resort exact plan for metrics the backend can neither compute
+    natively nor reach through an L2 reduction (L1/L∞ on grid engines):
+    the structure is bypassed, the metric-aware dense engines answer."""
+    if metric.kernel_name is None:
+        raise ValueError(
+            f"metric {metric.name!r} has neither a fused engine form nor an "
+            "L2 reduction; no backend can serve it"
+        )
+    from repro.core.brute import brute_knn_engine
+
+    if isinstance(spec, RangeSpec):
+        res = range_via_counted_topk(
+            index.points, queries, spec, metric, backend=index.backend_name
+        )
+        res.timings["plan"] = "brute_metric"
+        return res
+
+    t0 = time.perf_counter()
+    k = spec.k
+    if isinstance(spec, KnnSpec) and spec.stop_radius is not None:
+        raise ValueError(
+            f"stop_radius needs a radius-scheduled engine; backend "
+            f"{index.backend_name!r} serves metric {metric.name!r} through "
+            "the dense fallback — use HybridSpec for a radius cap"
+        )
+    d, i, n_tests = brute_knn_engine(
+        index.points, k, queries=queries, metric=metric.kernel_name
+    )
+    dists = np.asarray(d)
+    idxs = np.asarray(i)
+    found = None
+    if isinstance(spec, HybridSpec):
+        cut = spec.radius
+    else:
+        # a KnnSpec keeps the backend's OWN radius semantics whatever
+        # metric route answers it: "bound" backends (brute, fixed_radius —
+        # including fixed_radius's cfg default radius) cap the answer,
+        # "seed" backends return it unbounded
+        cut = index.knn_spec_radius_cut(spec)
+    if cut is not None:
+        dists, idxs, found = apply_radius_cut(
+            dists, idxs, cut, index.n_points
+        )
+    return KNNResult(
+        dists=dists,
+        idxs=idxs,
+        n_tests=int(n_tests),
+        backend=index.backend_name,
+        metric=metric.name,
+        found=found,
+        timings={
+            "plan": "brute_metric",
+            "query_seconds": time.perf_counter() - t0,
+        },
+    )

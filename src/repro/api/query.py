@@ -1,0 +1,194 @@
+"""Typed query specifications — the one planned query surface.
+
+PR 1 unified *who* answers a search (the backend registry); this module
+unifies *what* is being asked.  Every ``NeighborIndex.query`` call takes a
+``QuerySpec`` describing the search shape, and the planner
+(``repro.api.planner``) routes it to a backend's native ``execute_*`` hook
+or to a generic plan.  Three shapes cover the RT-search literature this
+repo reproduces:
+
+* ``KnnSpec(k)`` — the paper's unbounded kNN (TrueKNN): grow the radius
+  until every query has k neighbors.  ``start_radius`` seeds the schedule,
+  ``stop_radius`` is the Sec. 5.5.1 early termination (tail queries keep
+  partial lists).
+* ``RangeSpec(radius)`` — fixed-radius / range search (RTNN's sibling
+  workload): *all* neighbors within the ball, returned as a ragged
+  ``RangeResult`` in CSR layout.  ``max_neighbors`` truncates each row to
+  the nearest m (the RTNN "bounded buffer" regime).
+* ``HybridSpec(k, radius)`` — kNN truncated at a radius cap: exact k
+  nearest, except neighbors beyond ``radius`` are never reported (queries
+  in sparse regions come back with ``found < k``).
+
+Specs are frozen dataclasses: hashable, printable, safe to reuse across
+batches and to ship between processes.  Metric selection is orthogonal —
+``index.query(q, spec, metric="l1")`` — see ``repro.api.metrics``.
+
+This module also owns the once-per-process deprecation machinery for the
+PR-1 surface (``query(q, k=...)`` and the free-function shims).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import ClassVar, Optional
+
+__all__ = [
+    "QuerySpec",
+    "KnnSpec",
+    "RangeSpec",
+    "HybridSpec",
+    "warn_deprecated_once",
+]
+
+
+def _check_pos_int(name: str, v) -> int:
+    if not isinstance(v, (int,)) or isinstance(v, bool) or v < 1:
+        raise ValueError(f"{name} must be a positive int, got {v!r}")
+    return int(v)
+
+
+def _check_pos_float(name: str, v) -> float:
+    try:
+        f = float(v)
+    except (TypeError, ValueError):
+        raise ValueError(f"{name} must be a positive finite float, got {v!r}")
+    if not (f > 0.0) or f != f or f == float("inf"):
+        raise ValueError(f"{name} must be a positive finite float, got {v!r}")
+    return f
+
+
+@dataclasses.dataclass(frozen=True)
+class QuerySpec:
+    """Base of the spec family.  Subclasses are frozen value objects; all
+    validation that needs only the spec itself happens in ``__post_init__``,
+    index-dependent validation (k vs N) in the planner."""
+
+    kind: ClassVar[str] = "?"
+
+    def validate(self) -> None:  # pragma: no cover - overridden
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class KnnSpec(QuerySpec):
+    """k nearest neighbors, search space unbounded (paper Alg. 3).
+
+    start_radius: explicit first search radius (None: backend decides —
+        warm-start EMA, then paper Alg. 2 sampling).  Backend-defined for
+        engines without a radius schedule (brute post-filters).
+    stop_radius: terminate radius growth at this bound; tail queries keep
+        the partial (< k) lists they found (paper Sec. 5.5.1).
+    """
+
+    k: int
+    start_radius: Optional[float] = None
+    stop_radius: Optional[float] = None
+    kind: ClassVar[str] = "knn"
+
+    def __post_init__(self):
+        object.__setattr__(self, "k", _check_pos_int("k", self.k))
+        if self.start_radius is not None:
+            object.__setattr__(
+                self, "start_radius",
+                _check_pos_float("start_radius", self.start_radius),
+            )
+        if self.stop_radius is not None:
+            object.__setattr__(
+                self, "stop_radius",
+                _check_pos_float("stop_radius", self.stop_radius),
+            )
+        if (
+            self.start_radius is not None
+            and self.stop_radius is not None
+            and self.start_radius > self.stop_radius
+        ):
+            raise ValueError(
+                f"start_radius ({self.start_radius}) must not exceed "
+                f"stop_radius ({self.stop_radius})"
+            )
+
+    def validate(self) -> None:
+        pass  # __post_init__ already ran
+
+
+@dataclasses.dataclass(frozen=True)
+class RangeSpec(QuerySpec):
+    """All neighbors within ``radius`` (RTNN-style range search).
+
+    Answers are ragged; the result is a ``RangeResult`` in CSR layout
+    (``offsets``/``idxs``/``dists``), each row sorted nearest-first.
+    ``max_neighbors`` caps each row at the nearest m (``result.truncated``
+    marks rows that hit the cap).
+    """
+
+    radius: float
+    max_neighbors: Optional[int] = None
+    kind: ClassVar[str] = "range"
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "radius", _check_pos_float("radius", self.radius)
+        )
+        if self.max_neighbors is not None:
+            object.__setattr__(
+                self, "max_neighbors",
+                _check_pos_int("max_neighbors", self.max_neighbors),
+            )
+
+    def validate(self) -> None:
+        pass
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridSpec(QuerySpec):
+    """k nearest neighbors, truncated at a radius cap.
+
+    Exactly ``KnnSpec(k)`` with every neighbor farther than ``radius``
+    dropped: dense (Q, k) output, inf/sentinel-padded where the ball holds
+    fewer than k points.  The serving shape for "top-k but never return
+    garbage matches".
+
+    ``found`` contract: ``found[i] >= k`` iff all k slots are in-ball
+    (query resolved).  Its exact value past that is backend-defined — a
+    multi-round engine reports the count seen at the radius that resolved
+    the query, a single-round engine the full cap-ball population, the
+    dense plans a count capped at k.  Need the true ball population?  Ask
+    ``RangeSpec`` — that's what its counter is for.
+    """
+
+    k: int
+    radius: float
+    kind: ClassVar[str] = "hybrid"
+
+    def __post_init__(self):
+        object.__setattr__(self, "k", _check_pos_int("k", self.k))
+        object.__setattr__(
+            self, "radius", _check_pos_float("radius", self.radius)
+        )
+
+    def validate(self) -> None:
+        pass
+
+
+# -- once-per-process deprecation registry ---------------------------------
+
+_WARNED: set = set()
+
+
+def warn_deprecated_once(key: str, message: str, *, stacklevel: int = 3) -> None:
+    """Emit ``DeprecationWarning`` for ``key`` at most once per process.
+
+    Own registry (not ``warnings``' built-in "once") so the behavior is
+    independent of whatever filters the host application or pytest
+    installed.  Tests reset via ``_reset_deprecation_registry``.
+    """
+    if key in _WARNED:
+        return
+    _WARNED.add(key)
+    warnings.warn(message, DeprecationWarning, stacklevel=stacklevel)
+
+
+def _reset_deprecation_registry() -> None:
+    """Test hook: make the next ``warn_deprecated_once`` fire again."""
+    _WARNED.clear()

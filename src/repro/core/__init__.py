@@ -19,7 +19,7 @@ from .brute import brute_knn, brute_knn_engine
 from .datasets import DATASETS, make_dataset
 from .fixed_radius import fixed_radius_knn, fixed_radius_round
 from .grid import Grid, build_grid
-from .result import KNNResult, RoundStats
+from .result import KNNResult, RangeResult, RoundStats
 from .sampling import (
     max_knn_distance,
     percentile_knn_distance,
@@ -37,6 +37,7 @@ __all__ = [
     "Grid",
     "build_grid",
     "KNNResult",
+    "RangeResult",
     "max_knn_distance",
     "percentile_knn_distance",
     "sample_start_radius",

@@ -19,11 +19,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.ops import l2_normalize
+
 __all__ = ["brute_knn", "brute_knn_engine"]
 
 
-@partial(jax.jit, static_argnames=("k", "chunk", "exclude_self"))
-def _brute_impl(points, queries, query_ids, *, k, chunk, exclude_self):
+@partial(jax.jit, static_argnames=("k", "chunk", "exclude_self", "metric"))
+def _brute_impl(points, queries, query_ids, *, k, chunk, exclude_self, metric):
     n = points.shape[0]
     d = points.shape[1]
     q_total = queries.shape[0]
@@ -32,7 +34,11 @@ def _brute_impl(points, queries, query_ids, *, k, chunk, exclude_self):
 
     def one_chunk(_, inp):
         q, qid = inp
-        if d <= 8:
+        if metric in ("l1", "linf"):
+            # raw metric distances — no squaring, no sqrt downstream
+            ad = jnp.abs(q[:, None, :] - points[None, :, :])
+            d2 = jnp.sum(ad, axis=-1) if metric == "l1" else jnp.max(ad, -1)
+        elif d <= 8:
             # exact diff-based form: the matmul identity loses ~1e-7 absolute
             # to cancellation, which is catastrophic for the tiny squared
             # distances of tightly-clustered data (and d<=8 never profits
@@ -54,7 +60,10 @@ def _brute_impl(points, queries, query_ids, *, k, chunk, exclude_self):
     return td.reshape(q_total, k), ti.reshape(q_total, k)
 
 
-def brute_knn_engine(points, k, *, queries=None, query_ids=None, chunk: int = 512):
+def brute_knn_engine(
+    points, k, *, queries=None, query_ids=None, chunk: int = 512,
+    metric: str = "l2",
+):
     """Exact kNN engine.  Returns (dists (Q,k), idxs (Q,k), n_tests).
 
     ``queries`` None: the dataset queries itself, self-matches excluded (the
@@ -62,8 +71,16 @@ def brute_knn_engine(points, k, *, queries=None, query_ids=None, chunk: int = 51
     point index of each query for self-exclusion — pass N (or any
     out-of-range id) for queries that are not dataset members.  This is how
     TrueKNN's brute tail keeps self-exclusion for still-alive self-queries.
+
+    ``metric`` picks the distance ("l2", "l1", "linf", "cosine"); returned
+    dists are always true metric-space values (the l2 sqrt, the cosine
+    ``ℓ²/2`` map and the raw l1/linf forms all happen in here).
     """
     pts = jnp.asarray(points, jnp.float32)
+    if metric == "cosine":
+        pts = l2_normalize(pts)  # exact monotone L2 reduction
+    elif metric not in ("l2", "l1", "linf"):
+        raise ValueError(f"brute_knn_engine: unsupported metric {metric!r}")
     n = pts.shape[0]
     if queries is None:
         q = pts
@@ -72,6 +89,8 @@ def brute_knn_engine(points, k, *, queries=None, query_ids=None, chunk: int = 51
         k_cap = n - 1
     else:
         q = jnp.asarray(queries, jnp.float32)
+        if metric == "cosine":
+            q = l2_normalize(q)
         if query_ids is None:
             qid = jnp.full((q.shape[0],), n, jnp.int32)
             exclude_self = False
@@ -87,25 +106,41 @@ def brute_knn_engine(points, k, *, queries=None, query_ids=None, chunk: int = 51
         q = jnp.concatenate([q, jnp.zeros((pad, q.shape[1]), q.dtype)])
         qid = jnp.concatenate([qid, jnp.full((pad,), n, qid.dtype)])
     k_eff = min(int(k), k_cap)
+    impl_metric = "l2" if metric == "cosine" else metric
     d2, idx = _brute_impl(
-        pts, q, qid, k=k_eff, chunk=chunk, exclude_self=exclude_self
+        pts, q, qid, k=k_eff, chunk=chunk, exclude_self=exclude_self,
+        metric=impl_metric,
     )
     d2, idx = d2[:q_total], idx[:q_total]
     if k_eff < k:
         d2 = jnp.pad(d2, ((0, 0), (0, k - k_eff)), constant_values=jnp.inf)
         idx = jnp.pad(idx, ((0, 0), (0, k - k_eff)), constant_values=n)
     n_tests = q_total * n
-    return jnp.sqrt(d2), idx, n_tests
+    if metric == "l2":
+        d_out = jnp.sqrt(d2)
+    elif metric == "cosine":
+        d_out = d2 * 0.5  # squared L2 on normalized rows -> cosine distance
+    else:
+        d_out = d2  # l1 / linf: already raw metric distances
+    return d_out, idx, n_tests
 
 
 def brute_knn(points, k, *, queries=None, chunk: int = 512):
     """Deprecated shim: exact kNN via the registry's "brute" backend.
 
     Returns (dists (Q,k), idxs (Q,k), n_tests) — the historical tuple.
-    Prefer ``build_index(points, backend="brute").query(queries, k)`` and
-    hold the index across batches.
+    Prefer ``build_index(points, backend="brute").query(queries, KnnSpec(k))``
+    and hold the index across batches.
     """
-    from repro.api import build_index
+    from repro.api import KnnSpec, build_index
+    from repro.api.query import warn_deprecated_once
 
-    res = build_index(points, backend="brute", chunk=chunk).query(queries, k)
+    warn_deprecated_once(
+        "repro.core.brute.brute_knn",
+        "brute_knn() is deprecated; use build_index(points, backend='brute')"
+        ".query(queries, KnnSpec(k)) and hold the index across batches",
+    )
+    res = build_index(points, backend="brute", chunk=chunk).query(
+        queries, KnnSpec(int(k))
+    )
     return res.dists, res.idxs, res.n_tests

@@ -157,9 +157,16 @@ def fixed_radius_knn(points, radius, k, *, queries=None, chunk: int = 2048):
 
     Returns (dists (Q,k), idxs (Q,k), found (Q,), n_tests).
     """
-    from repro.api import build_index
+    from repro.api import HybridSpec, build_index
+    from repro.api.query import warn_deprecated_once
 
+    warn_deprecated_once(
+        "repro.core.fixed_radius.fixed_radius_knn",
+        "fixed_radius_knn() is deprecated; use build_index(points, "
+        "backend='fixed_radius').query(queries, HybridSpec(k, radius)) and "
+        "hold the index across batches",
+    )
     res = build_index(
-        points, backend="fixed_radius", radius=radius, chunk=chunk
-    ).query(queries, k)
+        points, backend="fixed_radius", chunk=chunk
+    ).query(queries, HybridSpec(int(k), float(radius)))
     return res.dists, res.idxs, res.found, res.n_tests

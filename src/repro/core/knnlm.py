@@ -24,10 +24,11 @@ variant is the natural beyond-paper extension.
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import numpy as np
 
-from repro.api import NeighborIndex, build_index
+from repro.api import HybridSpec, KnnSpec, NeighborIndex, build_index
 
 
 @dataclasses.dataclass
@@ -89,13 +90,26 @@ def knn_logprobs(
     *,
     k: int = 8,
     temperature: float = 1.0,
+    max_dist: Optional[float] = None,
+    metric: str = "l2",
 ):
-    """(Q, vocab) kNN distribution from the datastore's resident index."""
+    """(Q, vocab) kNN distribution from the datastore's resident index.
+
+    Retrieval goes through the planned spec surface: plain ``KnnSpec(k)``
+    by default, or — with ``max_dist`` — ``HybridSpec(k, max_dist)``, which
+    drops far-away (garbage) matches instead of letting them dilute the
+    distribution.  ``metric`` picks the retrieval distance (the kNN-LM
+    literature often prefers cosine on normalized keys; the registry makes
+    that a one-word change).
+    """
     q3 = store.projector(query_hiddens)
-    res = store.index.query(q3, k)
-    d = res.dists  # (Q, k)
+    spec = KnnSpec(k) if max_dist is None else HybridSpec(k, float(max_dist))
+    res = store.index.query(q3, spec, metric=metric)
+    d = res.dists  # (Q, k); inf where HybridSpec dropped a far match
     w = np.exp(-d / max(temperature, 1e-6))
-    w = w / np.clip(w.sum(1, keepdims=True), 1e-12, None)
+    w = np.where(np.isfinite(d), w, 0.0)
+    denom = np.clip(w.sum(1, keepdims=True), 1e-12, None)
+    w = w / denom
     out = np.zeros((q3.shape[0], vocab_size), np.float32)
     tgt = store.targets[np.clip(res.idxs, 0, len(store.targets) - 1)]
     for i in range(q3.shape[0]):

@@ -14,7 +14,7 @@ from typing import Optional
 
 import numpy as np
 
-__all__ = ["KNNResult", "RoundStats"]
+__all__ = ["KNNResult", "RangeResult", "RoundStats"]
 
 
 @dataclasses.dataclass
@@ -62,6 +62,8 @@ class KNNResult:
       start_radius / final_radius: first and last radius actually searched
                (None where the notion doesn't apply, e.g. brute force).
       backend: registry name of the backend that produced this result.
+      metric:  registry name of the distance metric ``dists`` is measured
+               in ("l2" unless the query asked otherwise).
     """
 
     dists: np.ndarray
@@ -73,6 +75,7 @@ class KNNResult:
     timings: dict = dataclasses.field(default_factory=dict)
     start_radius: Optional[float] = None
     final_radius: Optional[float] = None
+    metric: str = "l2"
 
     @property
     def n_rounds(self) -> int:
@@ -88,3 +91,71 @@ class KNNResult:
         if self.rounds:
             return sum(r.seconds for r in self.rounds)
         return float(self.timings.get("query_seconds", 0.0))
+
+
+@dataclasses.dataclass
+class RangeResult:
+    """Ragged range-search answer (``RangeSpec``) in CSR layout.
+
+    Row i's neighbors live at ``idxs[offsets[i]:offsets[i+1]]`` /
+    ``dists[offsets[i]:offsets[i+1]]``, sorted nearest-first.  Every listed
+    neighbor satisfies ``dist <= radius`` in ``metric``; when
+    ``max_neighbors`` clipped a row, ``truncated[i]`` is True and the row
+    holds the *nearest* m (never an arbitrary subset).
+
+    Attributes:
+      offsets: (Q+1,) int64 row starts; ``offsets[0] == 0``,
+               ``offsets[-1] == len(idxs)``.
+      idxs:    (nnz,) int32 dataset indices.
+      dists:   (nnz,) float32 distances in ``metric``.
+      radius:  the ball radius searched (metric units).
+      truncated: optional (Q,) bool, rows clipped by ``max_neighbors``.
+      n_tests / backend / metric / timings: as on ``KNNResult``.
+    """
+
+    offsets: np.ndarray
+    idxs: np.ndarray
+    dists: np.ndarray
+    radius: float
+    n_tests: int = 0
+    backend: str = ""
+    metric: str = "l2"
+    truncated: Optional[np.ndarray] = None
+    timings: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def n_queries(self) -> int:
+        return len(self.offsets) - 1
+
+    @property
+    def counts(self) -> np.ndarray:
+        """(Q,) neighbors per query."""
+        return np.diff(self.offsets)
+
+    def neighbors(self, i: int):
+        """(idxs, dists) of query ``i``, nearest-first."""
+        sl = slice(int(self.offsets[i]), int(self.offsets[i + 1]))
+        return self.idxs[sl], self.dists[sl]
+
+    def to_padded(self, k: Optional[int] = None, *, n_points: Optional[int] = None):
+        """Dense (Q, k) view: inf-padded dists, sentinel-padded idxs.
+
+        ``k`` defaults to the longest row; ``n_points`` sets the idx
+        sentinel (defaults to ``idxs.max() + 1`` — pass the real N when the
+        result might be empty)."""
+        counts = self.counts
+        k = int(k if k is not None else (counts.max() if counts.size else 0))
+        sentinel = int(
+            n_points
+            if n_points is not None
+            else (self.idxs.max() + 1 if len(self.idxs) else 0)
+        )
+        q = self.n_queries
+        dd = np.full((q, k), np.inf, np.float32)
+        ii = np.full((q, k), sentinel, np.int32)
+        for i in range(q):
+            idx, dst = self.neighbors(i)
+            m = min(len(idx), k)
+            dd[i, :m] = dst[:m]
+            ii[i, :m] = idx[:m]
+        return dd, ii

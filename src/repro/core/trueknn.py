@@ -51,8 +51,15 @@ def trueknn(
     terminate once the radius exceeds it, leaving tail queries with however
     many neighbors they found (``result.found`` counts them).
     """
-    from repro.api import build_index
+    from repro.api import KnnSpec, build_index
+    from repro.api.query import warn_deprecated_once
 
+    warn_deprecated_once(
+        "repro.core.trueknn.trueknn",
+        "trueknn() is deprecated; use build_index(points, backend='trueknn')"
+        ".query(queries, KnnSpec(k, start_radius=..., stop_radius=...)) and "
+        "hold the index across batches",
+    )
     index = build_index(
         points,
         backend="trueknn",
@@ -61,4 +68,7 @@ def trueknn(
         chunk=chunk,
         seed=seed,
     )
-    return index.query(queries, k, radius=start_radius, stop_radius=stop_radius)
+    return index.query(
+        queries,
+        KnnSpec(int(k), start_radius=start_radius, stop_radius=stop_radius),
+    )

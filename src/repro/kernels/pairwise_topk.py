@@ -9,12 +9,26 @@ touches HBM.  HBM traffic is O(Q·D + N·D·n_qtiles + Q·k) instead of O(Q·N).
 
 Also counts, per query, candidates within ``radius`` (the TrueKNN round
 resolution test), fusing the whole fixed-radius round body into one kernel.
+That in-radius counter doubles as the native ``RangeSpec`` engine: the count
+is the exact ball population, so a range query needs at most one re-run with
+``k = counts.max()`` to surface every in-ball neighbor.
+
+Metric dispatch (``metric`` static arg — see ``repro.api.metrics``):
+  * ``"l2"``   — the matmul identity keeps the cross term on the MXU
+    (d > 8); low-d uses exact per-axis diff accumulation on the VPU.
+  * ``"l1"`` / ``"linf"`` — per-axis |diff| accumulation (sum / running
+    max) on the VPU; no useful MXU form exists for these, and the paper's
+    2-3D domain makes the axis loop short.  Distances (and the radius
+    threshold ref) are in raw metric units, NOT squared.
+  * cosine never reaches the kernel: the wrapper (``ops.pairwise_topk``)
+    normalizes both sides and runs ``"l2"`` (exact monotone reduction).
 
 Layout notes (TPU):
   * feature dim D is zero-padded to a multiple of 128 lanes upstream; the
     cross-term matmul is (TQ, D) @ (D, TP) on the MXU.
   * top-k merge is a repeated-argmin selection network over the VMEM-resident
     concat(running_k, tile) buffer — static k, pure VPU, no sort lowering.
+    It only needs monotonicity, so it is metric-agnostic.
   * grid = (q_tiles, p_tiles), p innermost ("arbitrary"), so the running
     buffer carries across point tiles and the final tile writes the output.
 """
@@ -66,6 +80,8 @@ def _kernel(
     tp: int,
     n_real: int,
     n_p_tiles: int,
+    metric: str,
+    n_dim: int,
 ):
     pid_p = pl.program_id(1)
 
@@ -77,7 +93,16 @@ def _kernel(
 
     q = q_ref[...]
     p = p_ref[...]
-    if q.shape[1] <= 8:
+    if metric in ("l1", "linf"):
+        # VPU tile path: per-axis |diff| accumulation over the REAL feature
+        # dims only (n_dim, not the lane-padded q.shape[1] — padding
+        # columns are zero on both sides and would only waste VPU work).
+        # d2 here holds RAW metric distances (not squared); r2_ref matches.
+        d2 = jnp.zeros((q.shape[0], p.shape[0]), jnp.float32)
+        for a in range(min(n_dim, q.shape[1])):
+            ad = jnp.abs(q[:, a][:, None] - p[:, a][None, :])
+            d2 = d2 + ad if metric == "l1" else jnp.maximum(d2, ad)
+    elif q.shape[1] <= 8:
         # low-d (the paper's 2D/3D domain): exact per-axis diff accumulation
         # on the VPU — the matmul identity cancels catastrophically for the
         # tiny squared distances of clustered data, and a d<=8 contraction
@@ -122,22 +147,26 @@ def _kernel(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("k", "tq", "tp", "n_real", "interpret"),
+    static_argnames=("k", "tq", "tp", "n_real", "interpret", "metric",
+                     "n_dim"),
 )
 def pairwise_topk_padded(
     queries,  # (Qp, Dp) f32, padded
     query_ids,  # (Qp, 1) int32
     points,  # (Np, Dp) f32, padded
-    r2,  # (1, 1) f32
+    r2,  # (1, 1) f32 threshold: squared radius for l2, raw for l1/linf
     *,
     k: int,
     n_real: int,
     tq: int = DEFAULT_TQ,
     tp: int = DEFAULT_TP,
     interpret: bool = False,
+    metric: str = "l2",
+    n_dim: int | None = None,  # real (pre-padding) feature dim
 ):
     """Pallas call on pre-padded operands.  See ops.pairwise_topk for the
     user-facing wrapper (padding, defaults, CPU interpret fallback)."""
+    assert metric in ("l2", "l1", "linf"), metric
     qp, dp = queries.shape
     np_, _ = points.shape
     assert qp % tq == 0 and np_ % tp == 0
@@ -145,7 +174,8 @@ def pairwise_topk_padded(
     n_p_tiles = np_ // tp
 
     kernel = functools.partial(
-        _kernel, k=k, tp=tp, n_real=n_real, n_p_tiles=n_p_tiles
+        _kernel, k=k, tp=tp, n_real=n_real, n_p_tiles=n_p_tiles,
+        metric=metric, n_dim=dp if n_dim is None else n_dim,
     )
     grid = (n_q_tiles, n_p_tiles)
     return pl.pallas_call(

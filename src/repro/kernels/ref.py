@@ -6,18 +6,31 @@ import jax
 import jax.numpy as jnp
 
 
-def pairwise_topk_ref(queries, points, k, *, radius2=jnp.inf, query_ids=None):
+def pairwise_topk_ref(
+    queries, points, k, *, radius2=jnp.inf, query_ids=None, metric="l2"
+):
     """Oracle for kernels.pairwise_topk: exact top-k + in-radius counts.
 
     queries (Q, D) f32, points (N, D) f32.  ``query_ids`` (Q,) marks, per
     query, the point index to exclude (self); pass None for no exclusion.
-    Returns (d2 (Q,k), idx (Q,k), counts (Q,)).
+    ``metric`` mirrors the kernel-level dispatch ("l2", "l1", "linf" — the
+    cosine reduction happens in the ops wrapper, never kernel-side), and
+    ``radius2`` is the same kernel-space threshold the Pallas call takes:
+    SQUARED radius for l2, raw radius for l1/linf.
+    Returns (d (Q,k), idx (Q,k), counts (Q,)) — d squared for l2, raw
+    metric distances otherwise.
     """
     q = jnp.asarray(queries, jnp.float32)
     p = jnp.asarray(points, jnp.float32)
     n = p.shape[0]
     diff = q[:, None, :] - p[None, :, :]
-    d2 = jnp.sum(diff * diff, axis=-1)
+    if metric == "l1":
+        d2 = jnp.sum(jnp.abs(diff), axis=-1)
+    elif metric == "linf":
+        d2 = jnp.max(jnp.abs(diff), axis=-1)
+    else:
+        assert metric == "l2", metric
+        d2 = jnp.sum(diff * diff, axis=-1)
     if query_ids is not None:
         mask = jnp.arange(n)[None, :] == jnp.asarray(query_ids)[:, None]
         d2 = jnp.where(mask, jnp.inf, d2)

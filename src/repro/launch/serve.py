@@ -1,7 +1,13 @@
-"""Serving launcher: batched LM serving (continuous batching) on any arch.
+"""Serving launcher: batched LM serving (continuous batching) on any arch,
+or neighbor-search serving on the planned QuerySpec surface.
 
+    # LM serving (continuous batching)
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b \
         --requests 16 --max-new 24
+
+    # neighbor-search serving: resident index, streaming query batches
+    PYTHONPATH=src python -m repro.launch.serve --mode knn \
+        --backend trueknn --spec hybrid --k 8 --metric l2 --batches 6
 """
 
 from __future__ import annotations
@@ -9,21 +15,15 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
 import numpy as np
 
-from repro.configs import get_config, smoke_config
-from repro.models import init_params
-from repro.serve import BatchedServer, ServeConfig
 
+def _run_lm(args):
+    import jax
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-0.6b")
-    ap.add_argument("--requests", type=int, default=16)
-    ap.add_argument("--max-new", type=int, default=24)
-    ap.add_argument("--slots", type=int, default=8)
-    args = ap.parse_args()
+    from repro.configs import get_config, smoke_config
+    from repro.models import init_params
+    from repro.serve import BatchedServer, ServeConfig
 
     cfg = smoke_config(get_config(args.arch))
     params = init_params(jax.random.PRNGKey(0), cfg)
@@ -44,6 +44,100 @@ def main():
         f"({total_toks/dt:.0f} tok/s incl. compile)"
     )
     print("sample completion:", outs[0][:12])
+
+
+def _make_spec(args, warm_dists):
+    """Spec from CLI knobs; radius defaults to the warm batch's median
+    k-th-NN distance when not given (a radius most queries can fill)."""
+    from repro.api import HybridSpec, KnnSpec, RangeSpec
+
+    if args.spec == "knn":
+        return KnnSpec(args.k)
+    r = args.radius
+    if r is None:
+        r = float(np.median(warm_dists[:, -1]))
+    if args.spec == "range":
+        return RangeSpec(r, max_neighbors=args.max_neighbors)
+    if args.spec == "hybrid":
+        return HybridSpec(args.k, r)
+    raise SystemExit(f"unknown --spec {args.spec!r}")
+
+
+def _run_knn(args):
+    from repro.api import KnnSpec, RangeResult, build_index
+    from repro.core import make_dataset
+
+    pts = make_dataset(args.dataset, args.n, seed=0)
+    rng = np.random.default_rng(1)
+
+    t0 = time.perf_counter()
+    index = build_index(pts, backend=args.backend)
+    print(
+        f"dataset resident: {args.n} {args.dataset} points "
+        f"(backend={args.backend}), built in "
+        f"{(time.perf_counter()-t0)*1e3:.0f} ms"
+    )
+    # warm batch: pays sampling/grid builds/jit, and sizes the default radius
+    warm = index.query(
+        pts[rng.integers(0, args.n, args.batch_size)], KnnSpec(args.k),
+        metric=args.metric,
+    )
+    spec = _make_spec(args, warm.dists)
+    print(f"serving {args.batches} batches of {args.batch_size}: {spec} "
+          f"metric={args.metric}")
+
+    lat = []
+    for b in range(args.batches):
+        qs = pts[rng.integers(0, args.n, args.batch_size)] + rng.normal(
+            scale=0.5, size=(args.batch_size, pts.shape[1])
+        ).astype(np.float32)
+        t0 = time.perf_counter()
+        res = index.query(qs, spec, metric=args.metric)
+        dt = time.perf_counter() - t0
+        lat.append(dt)
+        plan = res.timings.get("plan", "native")
+        if isinstance(res, RangeResult):
+            shape = f"nnz={len(res.idxs)} rows_max={int(res.counts.max())}"
+        else:
+            shape = (
+                f"rounds={res.n_rounds} "
+                f"dropped={int(np.isinf(res.dists).sum())}"
+            )
+        print(
+            f"batch {b}: {dt*1e3:.0f} ms "
+            f"({dt/args.batch_size*1e6:.0f} us/query) plan={plan} {shape}"
+        )
+    print(
+        f"p50 batch latency {np.median(lat)*1e3:.0f} ms "
+        f"(steady state {min(lat)*1e3:.0f} ms)"
+    )
+    print(f"index stats: {index.stats()}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=["lm", "knn"], default="lm")
+    # lm mode
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--slots", type=int, default=8)
+    # knn mode
+    ap.add_argument("--dataset", default="kitti")
+    ap.add_argument("--n", type=int, default=50_000)
+    ap.add_argument("--backend", default="trueknn")
+    ap.add_argument("--spec", choices=["knn", "range", "hybrid"], default="knn")
+    ap.add_argument("--k", type=int, default=8)
+    ap.add_argument("--radius", type=float, default=None)
+    ap.add_argument("--max-neighbors", type=int, default=None)
+    ap.add_argument("--metric", default="l2")
+    ap.add_argument("--batches", type=int, default=5)
+    ap.add_argument("--batch-size", type=int, default=512)
+    args = ap.parse_args()
+    if args.mode == "knn":
+        _run_knn(args)
+    else:
+        _run_lm(args)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,520 @@
+"""QuerySpec v2 surface tests: spec validation, the metric registry vs a
+NumPy reference oracle (property-style on random clouds), RangeSpec CSR
+round-trips vs brute post-filter, hybrid-vs-filter parity, cfg-typo
+rejection, and the once-per-process deprecation contract."""
+
+import dataclasses
+import functools
+import warnings
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.api import (
+    HybridSpec,
+    KnnSpec,
+    Metric,
+    QuerySpec,
+    RangeResult,
+    RangeSpec,
+    available_metrics,
+    build_index,
+    get_metric,
+    register_metric,
+)
+from repro.api.query import _reset_deprecation_registry
+from repro.core import make_dataset
+
+BACKENDS = ["brute", "fixed_radius", "trueknn", "distributed"]
+METRICS = ["l2", "l1", "linf", "cosine"]
+TOL = 1e-4  # float32 engines vs float64 oracle
+
+
+@functools.lru_cache(maxsize=None)
+def _cloud(n=400, nq=32, seed=4):
+    pts = make_dataset("porto", n, seed=seed)
+    qs = make_dataset("porto", nq, seed=seed + 7)
+    return pts, qs
+
+
+@functools.lru_cache(maxsize=None)
+def _oracle(metric_name, n=400, nq=32, seed=4):
+    """(Q, N) float64 reference distances from the registry's pairwise."""
+    pts, qs = _cloud(n, nq, seed)
+    return get_metric(metric_name).pairwise(qs, pts)
+
+
+def _pick_radius(D, k, pct=60.0):
+    """A ball radius most queries can fill with >= 1 and < N neighbors."""
+    return float(np.percentile(np.sort(D, 1)[:, k - 1], pct))
+
+
+def _assert_knn_matches(res, D, k):
+    want = np.sort(D, 1)[:, :k]
+    got = np.sort(np.asarray(res.dists), 1)
+    np.testing.assert_allclose(got, want, rtol=TOL, atol=TOL)
+
+
+def _assert_hybrid_matches(res, D, k, r):
+    srt = np.sort(D, 1)[:, :k]
+    got = np.sort(np.asarray(res.dists), 1)
+    for i in range(D.shape[0]):
+        lo = int((srt[i] <= r - TOL).sum())  # certainly inside
+        hi = int((srt[i] <= r + TOL).sum())  # possibly inside
+        nf = int(np.isfinite(got[i]).sum())
+        assert lo <= nf <= hi, (i, lo, nf, hi)
+        np.testing.assert_allclose(got[i, :nf], srt[i, :nf], rtol=TOL, atol=TOL)
+        assert np.isinf(got[i, nf:]).all()
+
+
+def _assert_range_matches(rng_res, D, r, max_neighbors=None):
+    assert isinstance(rng_res, RangeResult)
+    assert rng_res.offsets[0] == 0 and rng_res.offsets[-1] == len(rng_res.idxs)
+    for i in range(D.shape[0]):
+        idx, dst = rng_res.neighbors(i)
+        assert np.all(np.diff(dst) >= -1e-6)  # nearest-first
+        assert np.all(dst <= r + TOL)
+        # distances agree with the oracle at the returned indices
+        np.testing.assert_allclose(dst, D[i, idx], rtol=TOL, atol=TOL)
+        must_have = np.flatnonzero(D[i] <= r - TOL)
+        if max_neighbors is None or len(must_have) <= max_neighbors:
+            assert set(must_have) <= set(idx.tolist()), i
+        else:
+            assert len(idx) == max_neighbors
+            assert rng_res.truncated[i]
+            # truncated rows hold the nearest m, never an arbitrary subset
+            assert dst[-1] <= np.sort(D[i])[max_neighbors - 1] + TOL
+
+
+# ---------------------------------------------------------------- specs
+
+
+def test_spec_validation_errors():
+    with pytest.raises(ValueError, match="k must be a positive int"):
+        KnnSpec(0)
+    with pytest.raises(ValueError, match="k must be a positive int"):
+        KnnSpec(True)
+    with pytest.raises(ValueError, match="radius must be a positive"):
+        RangeSpec(-1.0)
+    with pytest.raises(ValueError, match="radius must be a positive"):
+        HybridSpec(3, float("inf"))
+    with pytest.raises(ValueError, match="must not exceed"):
+        KnnSpec(3, start_radius=2.0, stop_radius=1.0)
+    with pytest.raises(ValueError, match="max_neighbors must be a positive"):
+        RangeSpec(1.0, max_neighbors=0)
+
+
+def test_specs_are_frozen_hashable_values():
+    s = KnnSpec(5, start_radius=0.1)
+    assert s == KnnSpec(5, start_radius=0.1)
+    assert hash(s) == hash(KnnSpec(5, start_radius=0.1))
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        s.k = 6
+
+
+def test_query_rejects_mixed_and_bad_args():
+    pts, qs = _cloud()
+    idx = build_index(pts, backend="brute")
+    with pytest.raises(TypeError, match="not both"):
+        idx.query(qs, KnnSpec(3), k=3)
+    with pytest.raises(TypeError, match="QuerySpec"):
+        idx.query(qs, "knn")
+    with pytest.raises(TypeError, match="needs a QuerySpec"):
+        idx.query(qs)
+    with pytest.raises(TypeError, match="k twice"):
+        idx.query(qs, 3, k=4)
+
+
+# ------------------------------------------- acceptance matrix: all four
+# backends x all registered metrics x all three spec kinds vs the oracle
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("metric", METRICS)
+def test_spec_matrix_matches_oracle(backend, metric):
+    pts, qs = _cloud()
+    D = _oracle(metric)
+    k = 4
+    r = _pick_radius(D, k)
+    index = build_index(pts, backend=backend)
+    kspec = (
+        KnnSpec(k, start_radius=float(np.sort(D, 1)[:, k - 1].max()) * 1.001)
+        if backend == "fixed_radius"
+        else KnnSpec(k)
+    )
+    _assert_knn_matches(index.query(qs, kspec, metric=metric), D, k)
+    _assert_hybrid_matches(
+        index.query(qs, HybridSpec(k, r), metric=metric), D, k, r
+    )
+    _assert_range_matches(
+        index.query(qs, RangeSpec(r), metric=metric), D, r
+    )
+
+
+@pytest.mark.parametrize("backend", ["brute", "trueknn"])
+@pytest.mark.parametrize("metric", ["l1", "cosine"])
+def test_self_query_excludes_self_all_plans(backend, metric):
+    """Generic metric plans (brute fallback, l2 view) must preserve the
+    dataset-queries-itself self-exclusion contract."""
+    pts, _ = _cloud()
+    index = build_index(pts, backend=backend)
+    res = index.query(None, KnnSpec(3), metric=metric)
+    assert not np.any(np.asarray(res.idxs) == np.arange(len(pts))[:, None])
+    rng = index.query(None, RangeSpec(_pick_radius(
+        get_metric(metric).pairwise(pts, pts) + np.diag(np.full(len(pts), np.inf)), 3
+    )), metric=metric)
+    for i in range(0, len(pts), 37):
+        idx, _ = rng.neighbors(i)
+        assert i not in idx.tolist()
+
+
+# ------------------------------------------------ property-style metrics
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    metric=st.sampled_from(METRICS),
+    k=st.integers(1, 6),
+)
+def test_metric_knn_property_vs_numpy(seed, metric, k):
+    """Every registered metric against an independent NumPy formula on a
+    random cloud (brute backend: the kernel/dense engine paths)."""
+    rng = np.random.default_rng(seed)
+    d = int(rng.integers(2, 6))
+    pts = rng.normal(size=(160, d)).astype(np.float32)
+    qs = rng.normal(size=(16, d)).astype(np.float32) * rng.uniform(0.5, 3)
+    diff = qs.astype(np.float64)[:, None, :] - pts.astype(np.float64)[None, :, :]
+    if metric == "l2":
+        D = np.sqrt((diff**2).sum(-1))
+    elif metric == "l1":
+        D = np.abs(diff).sum(-1)
+    elif metric == "linf":
+        D = np.abs(diff).max(-1)
+    else:  # cosine, written independently of the registry's form
+        qn = qs / np.linalg.norm(qs.astype(np.float64), axis=1, keepdims=True)
+        pn = pts / np.linalg.norm(pts.astype(np.float64), axis=1, keepdims=True)
+        D = 1.0 - qn.astype(np.float64) @ pn.astype(np.float64).T
+    res = build_index(pts, backend="brute").query(qs, KnnSpec(k), metric=metric)
+    np.testing.assert_allclose(
+        np.sort(res.dists, 1), np.sort(D, 1)[:, :k], rtol=1e-4, atol=1e-5
+    )
+
+
+def test_cosine_is_scale_invariant_on_unnormalized_inputs():
+    """Cosine must ignore magnitudes: wildly rescaled rows give identical
+    neighbor sets and distances (the normalize-then-L2 reduction)."""
+    rng = np.random.default_rng(0)
+    pts = rng.normal(size=(300, 5)).astype(np.float32)
+    qs = rng.normal(size=(24, 5)).astype(np.float32)
+    scales_p = rng.uniform(1e-2, 1e2, size=(300, 1)).astype(np.float32)
+    scales_q = rng.uniform(1e-2, 1e2, size=(24, 1)).astype(np.float32)
+    a = build_index(pts, backend="brute").query(qs, KnnSpec(5), metric="cosine")
+    b = build_index(pts * scales_p, backend="brute").query(
+        qs * scales_q, KnnSpec(5), metric="cosine"
+    )
+    np.testing.assert_array_equal(a.idxs, b.idxs)
+    np.testing.assert_allclose(a.dists, b.dists, rtol=1e-3, atol=1e-5)
+
+
+def test_linf_ties_return_valid_argmins():
+    """On an integer lattice L∞ distances tie heavily; any returned index
+    must still realize the oracle distance exactly."""
+    xs, ys = np.meshgrid(np.arange(7.0), np.arange(7.0))
+    pts = np.stack([xs.ravel(), ys.ravel()], 1).astype(np.float32)
+    qs = pts[:8] + np.float32(0.25)
+    D = get_metric("linf").pairwise(qs, pts)
+    k = 6
+    res = build_index(pts, backend="brute").query(qs, KnnSpec(k), metric="linf")
+    np.testing.assert_allclose(
+        np.sort(res.dists, 1), np.sort(D, 1)[:, :k], rtol=1e-6, atol=1e-6
+    )
+    # each reported (idx, dist) pair is self-consistent under ties
+    for i in range(len(qs)):
+        np.testing.assert_allclose(
+            res.dists[i], D[i, res.idxs[i]], rtol=1e-6, atol=1e-6
+        )
+
+
+def test_metric_registry_pluggable_and_unknown_rejected():
+    with pytest.raises(ValueError, match="unknown metric"):
+        build_index(_cloud()[0], backend="brute").query(
+            _cloud()[1], KnnSpec(2), metric="hamming"
+        )
+
+    @register_metric("test_scaled_l2")
+    def _():
+        return Metric(
+            "test_scaled_l2",
+            pairwise=lambda q, p: 2.0 * get_metric("l2").pairwise(q, p),
+            transform_points=lambda x: np.asarray(x, np.float32) * 2.0,
+            dist_from_l2=lambda d: d,
+            radius_to_l2=lambda r: r,
+        )
+
+    try:
+        assert "test_scaled_l2" in available_metrics()
+        pts, qs = _cloud()
+        res = build_index(pts, backend="trueknn").query(
+            qs, KnnSpec(3), metric="test_scaled_l2"
+        )
+        want = np.sort(_oracle("l2"), 1)[:, :3] * 2.0
+        np.testing.assert_allclose(np.sort(res.dists, 1), want,
+                                   rtol=TOL, atol=TOL)
+        assert res.metric == "test_scaled_l2"
+        assert res.timings["plan"] == "l2_view"
+    finally:
+        from repro.api.metrics import _METRICS
+
+        _METRICS.pop("test_scaled_l2", None)
+
+
+def test_metric_view_maps_radius_cfg_into_l2_space():
+    """A fixed_radius cfg radius is given in query-metric units; the cosine
+    companion must search the mapped L2 ball (sqrt(2r)), not the raw value."""
+    rng = np.random.default_rng(5)
+    pts = rng.normal(size=(300, 3)).astype(np.float32)  # grid engines are 2-3D
+    qs = rng.normal(size=(20, 3)).astype(np.float32)
+    r_cos = 0.5
+    D = get_metric("cosine").pairwise(qs, pts)
+    index = build_index(pts, backend="fixed_radius", radius=r_cos)
+    res = index.query(qs, KnnSpec(4), metric="cosine")  # cfg default radius
+    _assert_hybrid_matches(res, D, 4, r_cos)
+    view = index._metric_views["cosine"]
+    assert view._default_radius == pytest.approx(np.sqrt(2 * r_cos))
+
+
+def test_knn_start_radius_keeps_backend_semantics_across_metrics():
+    """KnnSpec.start_radius means the same thing on a backend whatever the
+    metric: schedule seed on trueknn (full k lists either way), radius
+    bound on brute/fixed_radius (beyond-radius slots dropped either way)."""
+    pts, qs = _cloud()
+    for metric in ("l2", "l1"):
+        D = _oracle(metric)
+        small = _pick_radius(D, 2, pct=30.0)
+        res = build_index(pts, backend="trueknn").query(
+            qs, KnnSpec(4, start_radius=small), metric=metric
+        )
+        assert np.isfinite(np.asarray(res.dists)).all(), metric  # seed, not cap
+        _assert_knn_matches(res, D, 4)
+        res = build_index(pts, backend="brute").query(
+            qs, KnnSpec(4, start_radius=small), metric=metric
+        )
+        _assert_hybrid_matches(res, D, 4, small)  # bound: capped answer
+
+
+def test_metric_view_companion_is_cached():
+    pts, qs = _cloud()
+    index = build_index(pts, backend="trueknn")
+    index.query(qs, KnnSpec(3), metric="cosine")
+    view1 = index._metric_views["cosine"]
+    index.query(qs[:8], KnnSpec(3), metric="cosine")
+    assert index._metric_views["cosine"] is view1
+    assert "cosine" in index.stats()["metric_views"]
+    # the companion warm-starts like any resident index
+    assert view1.stats()["batches"] == 2
+
+
+# ------------------------------------------------------ RangeSpec / CSR
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_range_csr_round_trip_vs_brute_post_filter(backend):
+    pts, qs = _cloud()
+    D = _oracle("l2")
+    r = _pick_radius(D, 6, pct=70.0)
+    rng_res = build_index(pts, backend=backend).query(qs, RangeSpec(r))
+    _assert_range_matches(rng_res, D, r)
+    # round-trip: dense view == brute hybrid post-filter at the same cap
+    kmax = int(rng_res.counts.max())
+    dd, ii = rng_res.to_padded(kmax, n_points=len(pts))
+    hyb = build_index(pts, backend="brute").query(qs, HybridSpec(kmax, r))
+    np.testing.assert_allclose(
+        np.sort(dd, 1), np.sort(hyb.dists[:, :kmax], 1), rtol=TOL, atol=TOL
+    )
+
+
+def test_range_max_neighbors_truncates_to_nearest():
+    pts, qs = _cloud()
+    D = _oracle("l2")
+    r = _pick_radius(D, 6, pct=80.0)
+    m = 3
+    res = build_index(pts, backend="trueknn").query(
+        qs, RangeSpec(r, max_neighbors=m)
+    )
+    assert res.truncated is not None
+    assert np.all(res.counts <= m)
+    _assert_range_matches(res, D, r, max_neighbors=m)
+    assert res.truncated.any()  # the 80th-pct ball holds > 3 somewhere
+
+
+def test_range_empty_balls_give_empty_rows():
+    pts, _ = _cloud()
+    far = pts + np.float32(1e3)  # off-cloud queries: empty balls
+    res = build_index(pts, backend="brute").query(far[:16], RangeSpec(1e-3))
+    assert res.n_queries == 16
+    assert res.offsets[-1] == 0 and len(res.idxs) == 0
+    dd, ii = res.to_padded(2, n_points=len(pts))
+    assert np.isinf(dd).all() and np.all(ii == len(pts))
+
+
+# ------------------------------------------------------------- hybrid
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_hybrid_equals_knn_then_filter(backend):
+    pts, qs = _cloud()
+    D = _oracle("l2")
+    k = 5
+    r = _pick_radius(D, k, pct=50.0)
+    res = build_index(pts, backend=backend).query(qs, HybridSpec(k, r))
+    _assert_hybrid_matches(res, D, k, r)
+    assert res.found is not None
+    resolved = np.isfinite(np.asarray(res.dists)).sum(1) == k
+    assert (np.asarray(res.found)[resolved] >= k).all()
+
+
+def test_trueknn_hybrid_searches_cap_exactly():
+    """The native hybrid driver's last round must search the cap radius
+    itself — neighbors between the last lattice radius and the cap are
+    found, unlike the legacy stop_radius schedule bound."""
+    pts, qs = _cloud()
+    D = _oracle("l2")
+    r = _pick_radius(D, 5, pct=40.0)
+    index = build_index(pts, backend="trueknn")
+    res = index.query(qs, HybridSpec(5, r))
+    assert res.timings.get("plan", "native") == "native"
+    radii = [rs.radius for rs in res.rounds]
+    assert radii[-1] == pytest.approx(r)
+    assert all(x <= r + 1e-9 for x in radii)
+    _assert_hybrid_matches(res, D, 5, r)
+
+
+def test_trueknn_hybrid_cap_survives_brute_tail():
+    """Far off-cloud queries drive the driver into its brute-equivalent
+    guard; the unbounded brute tail must still respect the hybrid cap."""
+    rng = np.random.default_rng(0)
+    pts = rng.normal(size=(500, 3)).astype(np.float32)
+    far = (rng.normal(size=(16, 3)) + 50.0).astype(np.float32)
+    cap = 20.0  # above the 4*extent radius clamp, below the ~47 gap
+    res = build_index(pts, backend="trueknn").query(far, HybridSpec(5, cap))
+    d = np.asarray(res.dists)
+    assert np.isinf(d).all()  # nothing within the cap
+    assert np.all(np.asarray(res.idxs) == 500)
+    assert np.all(np.asarray(res.found) == 0)
+    # sanity: a cap beyond the ~sqrt(3)*50 gap does return true neighbors
+    res2 = build_index(pts, backend="trueknn").query(far, HybridSpec(5, 120.0))
+    assert np.isfinite(np.asarray(res2.dists)).all()
+
+
+def test_fixed_radius_default_radius_bounds_every_metric():
+    """The cfg default radius must bound KnnSpec answers on every metric
+    route (native l2, cosine l2_view, l1 dense fallback) identically."""
+    rng = np.random.default_rng(7)
+    pts = rng.normal(size=(300, 3)).astype(np.float32)
+    qs = rng.normal(size=(20, 3)).astype(np.float32)
+    for metric, r in (("l2", 0.6), ("l1", 0.9), ("cosine", 0.3)):
+        D = get_metric(metric).pairwise(qs, pts)
+        index = build_index(pts, backend="fixed_radius", radius=r)
+        res = index.query(qs, KnnSpec(4), metric=metric)
+        _assert_hybrid_matches(res, D, 4, r)
+    # and no radius at all still errors on the fallback route too
+    with pytest.raises(ValueError, match="needs a radius"):
+        build_index(pts, backend="fixed_radius").query(
+            qs, KnnSpec(4), metric="l1"
+        )
+
+
+# ----------------------------------------------- cfg typo rejection
+
+
+def test_build_index_rejects_unknown_cfg_keys():
+    pts, _ = _cloud()
+    with pytest.raises(ValueError, match=r"growht.*valid knobs.*growth"):
+        build_index(pts, backend="trueknn", growht=2.0)
+    with pytest.raises(ValueError, match=r"radius_.*valid knobs.*radius"):
+        build_index(pts, backend="fixed_radius", radius_=0.5)
+    with pytest.raises(ValueError, match="valid knobs"):
+        build_index(pts, backend="brute", chunks=64)
+    with pytest.raises(ValueError, match="valid knobs"):
+        build_index(pts, backend="distributed", growtth=2.0)
+    # valid keys still pass through
+    assert build_index(pts, backend="brute", chunk=64)._chunk == 64
+
+
+# -------------------------------------------------- deprecation contract
+
+
+def test_legacy_query_k_warns_once_and_matches_spec_path():
+    pts, qs = _cloud()
+    index = build_index(pts, backend="trueknn")
+    want = index.query(qs, KnnSpec(4))
+    _reset_deprecation_registry()
+    with pytest.warns(DeprecationWarning, match="KnnSpec"):
+        legacy = index.query(qs, 4)
+    # once per process: the second legacy call must stay silent
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        legacy2 = index.query(qs, k=4)
+    np.testing.assert_allclose(legacy.dists, want.dists, rtol=1e-6, atol=1e-7)
+    np.testing.assert_array_equal(legacy.idxs, want.idxs)
+    np.testing.assert_allclose(legacy2.dists, want.dists, rtol=1e-6, atol=1e-7)
+
+
+def test_free_function_shims_warn_once_and_match_spec_path():
+    from repro.core import brute_knn, fixed_radius_knn, trueknn
+
+    pts, qs = _cloud()
+    _reset_deprecation_registry()
+    with pytest.warns(DeprecationWarning, match="trueknn\\(\\) is deprecated"):
+        res = trueknn(pts, 3, queries=qs)
+    want = build_index(pts, backend="trueknn").query(qs, KnnSpec(3))
+    np.testing.assert_allclose(
+        np.sort(res.dists, 1), np.sort(want.dists, 1), rtol=1e-5, atol=1e-7
+    )
+
+    with pytest.warns(DeprecationWarning, match="brute_knn\\(\\) is deprecated"):
+        d, i, t = brute_knn(pts, 3, queries=qs)
+    np.testing.assert_allclose(
+        np.sort(np.asarray(d), 1), np.sort(want.dists, 1), rtol=1e-5, atol=1e-7
+    )
+
+    r = _pick_radius(_oracle("l2"), 3)
+    with pytest.warns(DeprecationWarning, match="fixed_radius_knn\\(\\) is"):
+        fixed_radius_knn(pts, r, 3, queries=qs)
+
+    # all three keys now recorded: everything stays silent from here on
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        trueknn(pts, 3, queries=qs)
+        brute_knn(pts, 3, queries=qs)
+        fixed_radius_knn(pts, r, 3, queries=qs)
+
+
+# ------------------------------------------------------- planner errors
+
+
+def test_stop_radius_rejected_where_meaningless():
+    pts, qs = _cloud()
+    with pytest.raises(ValueError, match="no radius schedule"):
+        build_index(pts, backend="brute").query(
+            qs, KnnSpec(3, stop_radius=1.0)
+        )
+    with pytest.raises(ValueError, match="stop_radius"):
+        build_index(pts, backend="trueknn").query(
+            qs, KnnSpec(3, stop_radius=1.0), metric="l1"
+        )
+
+
+def test_results_carry_metric_and_plan_tags():
+    pts, qs = _cloud()
+    tk = build_index(pts, backend="trueknn")
+    assert tk.query(qs, KnnSpec(3)).metric == "l2"
+    assert tk.query(qs, KnnSpec(3), metric="l1").metric == "l1"
+    assert tk.query(qs, KnnSpec(3), metric="l1").timings["plan"] == "brute_metric"
+    assert tk.query(qs, KnnSpec(3), metric="cosine").timings["plan"] == "l2_view"
+    rng = build_index(pts, backend="distributed").query(qs, RangeSpec(0.5))
+    assert rng.timings["plan"] == "knn_sweep"
+    assert isinstance(rng, RangeResult) and rng.metric == "l2"
