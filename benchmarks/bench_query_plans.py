@@ -21,7 +21,14 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.api import HybridSpec, KnnSpec, RangeSpec, build_index
+from repro.api import (
+    HybridSpec,
+    KnnSpec,
+    RangeSpec,
+    build_index,
+    dropped_counts,
+    warm_default_radius,
+)
 from repro.core import make_dataset
 
 from .common import emit, timed
@@ -56,7 +63,9 @@ def main(n=16_000, n_queries=512, k=8) -> dict:
     tk = build_index(pts, backend="trueknn")
     br = build_index(pts, backend="brute")
     warm = tk.query(qs, KnnSpec(k))
-    radius = float(np.median(warm.dists[:, -1]))  # most queries can fill k
+    # median *finite* k-th-NN distance (inf rows from unfilled queries must
+    # not poison the default radius); falls back to the sampled radius
+    radius = warm_default_radius(warm.dists, tk)
 
     # -- spec kinds on the grid path ---------------------------------------
     res, secs, plan = _bench_spec(tk, qs, KnnSpec(k))
@@ -65,8 +74,9 @@ def main(n=16_000, n_queries=512, k=8) -> dict:
     record("trueknn/range/l2", res, secs, plan,
            f"nnz={len(res.idxs)} rows_max={int(res.counts.max())}")
     res, secs, plan = _bench_spec(tk, qs, HybridSpec(k, radius))
+    partial, empty = dropped_counts(res.dists)  # queries, not inf cells
     record("trueknn/hybrid/l2", res, secs, plan,
-           f"dropped={int(np.isinf(res.dists).sum())}")
+           f"dropped_partial={partial} dropped_empty={empty}")
 
     # -- spec kinds on the dense kernel path -------------------------------
     res, secs, plan = _bench_spec(br, qs, KnnSpec(k))

@@ -26,6 +26,7 @@ def main() -> None:
         bench_percentile,
         bench_query_plans,
         bench_rounds,
+        bench_serve,
         bench_start_radius,
         bench_work_counts,
     )
@@ -55,6 +56,11 @@ def main() -> None:
     with open("BENCH_query_plans.json", "w") as f:
         json.dump(plans_summary, f, indent=2, default=str)
     print("# wrote BENCH_query_plans.json", flush=True)
+    _section("serving (NeighborServer: open-loop load, microbatching, cache)")
+    serve_summary = bench_serve.main()
+    with open("BENCH_serve.json", "w") as f:
+        json.dump(serve_summary, f, indent=2, default=str)
+    print("# wrote BENCH_serve.json", flush=True)
     _section("kernel microbench")
     bench_kernel.main()
     print(f"# total {time.time()-t0:.1f}s", flush=True)

@@ -28,6 +28,12 @@ kNN/hybrid answers share ``KNNResult`` (dists, idxs, found, rounds,
 timings); range answers are ragged and come back as ``RangeResult`` in CSR
 layout (``offsets``/``idxs``/``dists``, rows nearest-first).
 
+For serving many clients off one resident index, ``NeighborServer``
+(``repro.api.server``) fronts any index with submit/poll ticket futures,
+microbatching (pending requests coalesce into padded per-(spec, metric)
+batches), an LRU result cache over quantized query coordinates, and
+per-bucket latency/throughput metering — see docs/api.md.
+
 Deprecated (warn once per process, removed in a future PR):
 
     index.query(q, k, radius=..., stop_radius=...)   # PR-1 signature
@@ -55,6 +61,7 @@ from .query import HybridSpec, KnnSpec, QuerySpec, RangeSpec
 from . import backends  # registers the built-in backends  # noqa: E402
 from .index import NeighborIndex, build_index
 from .registry import available_backends, get_backend, register_backend
+from .server import NeighborServer, Ticket, dropped_counts, warm_default_radius
 
 __all__ = [
     "KNNResult",
@@ -71,6 +78,10 @@ __all__ = [
     "normalize_rows",
     "NeighborIndex",
     "build_index",
+    "NeighborServer",
+    "Ticket",
+    "warm_default_radius",
+    "dropped_counts",
     "available_backends",
     "get_backend",
     "register_backend",

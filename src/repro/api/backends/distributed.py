@@ -11,6 +11,7 @@ CPU; real speedups need a multi-device mesh (see tests/test_distributed).
 from __future__ import annotations
 
 import time
+import warnings
 from typing import Optional
 
 import jax
@@ -29,8 +30,16 @@ __all__ = ["DistributedIndex"]
 def _default_mesh(point_axis: str):
     from jax.sharding import Mesh
 
-    devs = jax.devices()
+    devs = list(jax.devices())
     p = 1 << (len(devs).bit_length() - 1)  # largest pow2 prefix
+    if p < len(devs):
+        warnings.warn(
+            f"distributed backend: using {p} of {len(devs)} available "
+            f"devices (the hypercube top-k merge needs a power-of-2 shard "
+            f"count); pass an explicit mesh to choose which devices serve",
+            RuntimeWarning,
+            stacklevel=3,
+        )
     return Mesh(np.array(devs[:p]), (point_axis,))
 
 
@@ -68,14 +77,16 @@ class DistributedIndex(NeighborIndex):
         self._sampled_r: Optional[float] = None
         self._queries_served = 0
         self._batches = 0
+        self._total_tests = 0
 
     def execute_knn(self, queries, spec: KnnSpec, metric: Metric) -> KNNResult:
         """Native kNN over the sharded cloud (L2 only; range/hybrid specs
         and reducible metrics arrive through the planner's generic plans)."""
         if spec.stop_radius is not None:
-            raise ValueError(
-                "distributed backend does not implement stop_radius yet; "
-                "use backend='trueknn'"
+            # no radius schedule to stop: the planner routes this spec to
+            # its companion-trueknn fallback (plan tag "knn_fallback")
+            raise NotImplementedError(
+                "distributed backend has no native stop_radius path"
             )
         from repro.core.distributed import distributed_trueknn
         from repro.core.sampling import sample_start_radius
@@ -88,7 +99,7 @@ class DistributedIndex(NeighborIndex):
             if self._sampled_r is None:
                 self._sampled_r = sample_start_radius(self._pts)
             radius = self._sampled_r
-        dists, idxs, rounds = distributed_trueknn(
+        dists, idxs, rounds, n_tests = distributed_trueknn(
             self._pts,
             k,
             self._mesh,
@@ -101,10 +112,14 @@ class DistributedIndex(NeighborIndex):
         )
         self._queries_served += dists.shape[0]
         self._batches += 1
+        self._total_tests += int(n_tests)
         return KNNResult(
             dists=np.asarray(dists),
             idxs=np.asarray(idxs),
-            n_tests=0,  # the sharded engine doesn't meter per-pair work
+            # the dense sharded engine evaluates every (padded query, point)
+            # pair each round, so this count is exact for it (padding rows
+            # included — they are real work on the mesh)
+            n_tests=int(n_tests),
             backend=self.backend_name,
             metric=metric.name,
             timings={
@@ -120,5 +135,6 @@ class DistributedIndex(NeighborIndex):
             mesh_shape=dict(self._mesh.shape),
             queries_served=self._queries_served,
             batches=self._batches,
+            total_tests=self._total_tests,
         )
         return s

@@ -9,6 +9,9 @@
 3. covers every gap with a *generic plan*, so a (spec, metric, backend)
    triple is never "unsupported", only "not yet fast":
 
+   * knn variant the backend's engine rejects (``execute_knn`` raises
+     ``NotImplementedError``, e.g. ``stop_radius`` on the distributed
+     backend) -> a cached companion trueknn index over the same cloud,
    * hybrid without a native path      -> knn-then-filter,
    * range without a native path       -> oversized-k hybrid sweep (double
      k until each query's ball is provably exhausted),
@@ -76,7 +79,10 @@ def execute(index, queries, spec: QuerySpec, metric_name: str):
 def _dispatch(index, queries, spec, metric: Metric):
     """Native hook, or generic plan where the hook is missing."""
     if isinstance(spec, KnnSpec):
-        return index.execute_knn(queries, spec, metric)
+        try:
+            return index.execute_knn(queries, spec, metric)
+        except NotImplementedError:
+            return _knn_via_fallback(index, queries, spec, metric)
     if isinstance(spec, RangeSpec):
         try:
             return index.execute_range(queries, spec, metric)
@@ -88,6 +94,35 @@ def _dispatch(index, queries, spec, metric: Metric):
         except NotImplementedError:
             return _hybrid_via_knn(index, queries, spec, metric)
     raise TypeError(f"unknown QuerySpec kind: {type(spec).__name__}")
+
+
+# -- generic plan: knn via a companion engine -------------------------------
+
+
+def _knn_via_fallback(index, queries, spec: KnnSpec, metric: Metric):
+    """Serve a ``KnnSpec`` variant the backend's own engine rejects
+    (``execute_knn`` raised ``NotImplementedError`` — e.g. ``stop_radius``
+    on the distributed backend, which has no radius schedule to stop).
+
+    A cached companion ``trueknn`` index over the same resident cloud
+    answers instead: it implements the full KnnSpec surface (radius
+    schedule, stop_radius tails) exactly, so the spec keeps one meaning
+    everywhere — the answer is merely "not yet fast" on this backend.
+    The plan is tagged ``knn_fallback`` with the original backend name
+    kept on the result.
+    """
+    t0 = time.perf_counter()
+    view = getattr(index, "_knn_fallback_view", None)
+    if view is None:
+        from .backends.trueknn import TrueKNNIndex
+
+        view = TrueKNNIndex(index.points)
+        index._knn_fallback_view = view
+    res = execute(view, queries, spec, metric.name)
+    res.backend = index.backend_name
+    res.timings["plan"] = "knn_fallback"
+    res.timings["query_seconds"] = time.perf_counter() - t0
+    return res
 
 
 # -- generic plan: hybrid = knn then filter ---------------------------------

@@ -1,0 +1,688 @@
+"""NeighborServer: an async microbatching serving front-end for resident
+indexes.
+
+The paper's build-once/iterate design (the BVH is built once, rounds only
+re-search unresolved queries) rewards exactly one serving shape: a resident
+``NeighborIndex`` behind a request queue.  RTNN's scheduling results add
+the second half of the story — *how* queries are grouped into batches is a
+first-order performance knob, so grouping must live server-side where the
+whole queue is visible, not per call site.
+
+``NeighborServer`` fronts any ``NeighborIndex`` with:
+
+* **Tickets.**  ``submit(rows, spec, metric=...)`` enqueues a request and
+  returns a :class:`Ticket` future immediately; ``ticket.result()`` blocks
+  (driving the queue itself when no worker thread is running, so
+  single-threaded callers never deadlock), ``ticket.done()`` polls.
+* **Microbatching.**  Pending requests are coalesced into one padded batch
+  per (spec, metric) queue — only *identical* specs merge, so results are
+  exactly what ``index.query`` would return — and the padded row count is
+  rounded up to a power of two so the jitted programs underneath see a
+  handful of shapes, not one per arrival pattern.  The compile-shape
+  bucket is therefore (spec kind, k, metric, padded Q): many clients, one
+  program.
+* **Result cache.**  An LRU keyed on (spec, metric, quantized query
+  coordinates) serves repeat queries without touching the index.  Keys
+  quantize each coordinate to ``cache_quant`` (default 1e-6): queries
+  closer than the quantum collide and share an answer — set
+  ``cache_size=0`` if even that is too much approximation.
+* **Metering.**  Per (spec-kind, k, metric) bucket: request latency
+  p50/p99, throughput, batch-size histogram, cache hit rate, queue depth —
+  all through ``server.stats()``.
+
+Synchronous use (tests, notebooks)::
+
+    server = NeighborServer(index)
+    t1 = server.submit(q1, KnnSpec(8))
+    t2 = server.submit(q2, KnnSpec(8))      # same bucket: coalesces with t1
+    res = t1.result()                        # drives the queue inline
+
+Open-loop use (real serving)::
+
+    server.start()                           # background worker thread
+    tickets = [server.submit(q, spec) for q in arrivals]
+    outs = [t.result(timeout=30) for t in tickets]
+    server.stop()
+
+This module also owns two small serving-loop helpers shared by
+``launch/serve.py`` and the benchmarks: :func:`warm_default_radius` (the
+finite-median default radius) and :func:`dropped_counts` (per-query, not
+per-cell, drop counting).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import OrderedDict, deque
+from typing import Optional
+
+import numpy as np
+
+from repro.core.grid import _next_pow2
+from repro.core.result import KNNResult, RangeResult
+
+from .query import QuerySpec
+
+__all__ = [
+    "NeighborServer",
+    "Ticket",
+    "warm_default_radius",
+    "dropped_counts",
+    "poisson_open_loop",
+]
+
+
+# -- serving-loop helpers ----------------------------------------------------
+
+
+def warm_default_radius(warm_dists, index=None) -> float:
+    """Default serving radius from a warm batch: the median *finite*
+    k-th-NN distance.
+
+    ``np.median(warm_dists[:, -1])`` is the natural default — a radius most
+    queries can fill — but it breaks the moment any warm query fails to
+    fill k neighbors (stop_radius tails, radius-bounded backends): the
+    last column holds ``inf``, and one inf row is enough to push the
+    median to inf or propagate NaN into specs.  This helper medians over
+    the finite entries only, and when *none* are finite falls back to the
+    index's sampled start radius (paper Alg. 2), which depends only on the
+    resident cloud.
+    """
+    last = np.asarray(warm_dists)[:, -1].astype(np.float64)
+    fin = last[np.isfinite(last)]
+    if fin.size:
+        return float(np.median(fin))
+    if index is None:
+        raise ValueError(
+            "no warm query filled k neighbors and no index was given to "
+            "fall back to its sampled radius"
+        )
+    r = getattr(index, "_sampled_r", None)
+    if r is None:
+        from repro.core.sampling import sample_start_radius
+
+        r = sample_start_radius(index.points)
+    return float(r)
+
+
+def dropped_counts(dists) -> tuple:
+    """(queries with *any* inf slot, queries with *all* slots inf).
+
+    ``np.isinf(dists).sum()`` counts inf *cells* and overstates drops by up
+    to k x (one unresolved query contributes up to k).  Serving reports
+    want queries: ``any`` counts partially-filled rows, ``all`` counts
+    queries that found nothing.
+    """
+    inf = np.isinf(np.asarray(dists))
+    if inf.ndim == 1:
+        inf = inf[:, None]
+    return int(inf.any(axis=1).sum()), int(inf.all(axis=1).sum())
+
+
+def poisson_open_loop(server, rows, spec, rate, rng, *, metric="l2",
+                      timeout=120.0):
+    """Drive ``server`` with a Poisson open-loop arrival process: one
+    request per row of ``rows``, exponential inter-arrival gaps at ``rate``
+    requests/second, submitted regardless of completions (the regime where
+    microbatching earns its keep).  Starts the worker thread, waits for
+    every ticket, stops the worker.
+
+    Returns ``(results, wall_seconds, latencies)`` with ``latencies`` the
+    per-request submit-to-done seconds.  Shared by ``launch/serve.py
+    --arrival open`` and ``benchmarks/bench_serve.py`` so both measure the
+    same arrival process.
+    """
+    rows = np.asarray(rows, np.float32)
+    targets = np.cumsum(rng.exponential(1.0 / rate, size=len(rows)))
+    server.start()
+    t0 = time.perf_counter()
+    try:
+        tickets = []
+        for i in range(len(rows)):
+            delay = t0 + float(targets[i]) - time.perf_counter()
+            if delay > 0:
+                time.sleep(delay)
+            tickets.append(server.submit(rows[i], spec, metric=metric))
+        results = [t.result(timeout=timeout) for t in tickets]
+        wall = time.perf_counter() - t0
+    finally:
+        # a timeout/failure must not leak the worker thread: a leaked
+        # worker keeps calling index.query under later drivers of the
+        # same index
+        server.stop()
+    lat = np.asarray(
+        [r.timings["request_seconds"] for r in results], np.float64
+    )
+    return results, wall, lat
+
+
+# -- tickets -----------------------------------------------------------------
+
+
+class Ticket:
+    """Future for one submitted request.
+
+    ``result()`` returns the same type ``index.query`` would have returned
+    for this request's rows alone (``KNNResult`` for knn/hybrid,
+    ``RangeResult`` for range).  When no worker thread is running, the
+    calling thread drives the server's queue itself, so tickets always
+    make progress.
+    """
+
+    __slots__ = (
+        "_server", "spec", "metric", "n_rows", "submitted_at",
+        "_event", "_result", "_error", "_rows_left", "_asm",
+    )
+
+    def __init__(self, server, spec, metric, n_rows):
+        self._server = server
+        self.spec = spec
+        self.metric = metric
+        self.n_rows = n_rows
+        self.submitted_at = time.perf_counter()
+        self._event = threading.Event()
+        self._result = None
+        self._error: Optional[BaseException] = None
+        self._rows_left = n_rows
+        self._asm: dict = {"rows": [None] * n_rows, "cache_hits": 0,
+                           "n_tests": 0, "batch_sizes": []}
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None):
+        """Block until served; drives the queue inline when the server has
+        no worker thread."""
+        deadline = None if timeout is None else time.perf_counter() + timeout
+        while not self._event.is_set():
+            if self._server._worker_alive():
+                # bounded slices, not one open-ended wait: if the worker is
+                # stopped without draining while we sleep, the next loop
+                # iteration sees it gone and self-drives the queue instead
+                # of blocking forever
+                remaining = (
+                    None if deadline is None
+                    else max(0.0, deadline - time.perf_counter())
+                )
+                slice_s = 0.05 if remaining is None else min(0.05, remaining)
+                if not self._event.wait(slice_s) and remaining is not None \
+                        and remaining <= slice_s:
+                    raise TimeoutError(
+                        f"ticket not served within {timeout}s "
+                        f"(spec={self.spec}, queue={self._server._depth()})"
+                    )
+            else:
+                served = self._server.step()
+                if served == 0 and not self._event.is_set():
+                    # another polling thread holds the rows of our batch;
+                    # yield until it finalizes us
+                    self._event.wait(0.01)
+            if deadline is not None and time.perf_counter() > deadline:
+                if not self._event.is_set():
+                    raise TimeoutError(f"ticket not served within {timeout}s")
+        if self._error is not None:
+            raise self._error
+        return self._result
+
+
+# -- per-bucket metering -----------------------------------------------------
+
+
+class _Meter:
+    """Counters for one (spec-kind, k, metric) serving bucket.
+
+    All state is O(1) in served traffic: counts, a streaming batch-size
+    histogram, and a bounded sliding window of recent request latencies
+    (``LATENCY_WINDOW``) — a long-running worker must not grow memory per
+    request, and the recent window is what serving percentiles mean
+    anyway."""
+
+    LATENCY_WINDOW = 4096
+
+    __slots__ = ("requests", "rows", "batches", "batch_rows", "batch_hist",
+                 "latencies", "cache_hits", "cache_misses")
+
+    def __init__(self):
+        self.requests = 0
+        self.rows = 0
+        self.batches = 0
+        self.batch_rows = 0
+        self.batch_hist: dict = {}
+        self.latencies: deque = deque(maxlen=self.LATENCY_WINDOW)
+        self.cache_hits = 0
+        self.cache_misses = 0
+
+    def record_batch(self, n_rows: int) -> None:
+        self.batches += 1
+        self.batch_rows += n_rows
+        self.batch_hist[int(n_rows)] = self.batch_hist.get(int(n_rows), 0) + 1
+
+    def summary(self, queue_depth: int) -> dict:
+        lat = np.asarray(self.latencies, np.float64)
+        looked = self.cache_hits + self.cache_misses
+        return {
+            "requests": self.requests,
+            "rows": self.rows,
+            "batches": self.batches,
+            "batch_size_hist": dict(self.batch_hist),
+            "mean_batch_rows": (
+                round(self.batch_rows / self.batches, 2) if self.batches else 0.0
+            ),
+            "latency_p50_ms": (
+                round(float(np.percentile(lat, 50)) * 1e3, 3) if lat.size else None
+            ),
+            "latency_p99_ms": (
+                round(float(np.percentile(lat, 99)) * 1e3, 3) if lat.size else None
+            ),
+            "cache_hits": self.cache_hits,
+            "cache_hit_rate": (
+                round(self.cache_hits / looked, 4) if looked else 0.0
+            ),
+            "queue_depth": queue_depth,
+        }
+
+
+# -- the server --------------------------------------------------------------
+
+
+class NeighborServer:
+    """Microbatching request front-end over one resident ``NeighborIndex``.
+
+    Args:
+      index: any built ``NeighborIndex`` (the server owns its hot path —
+        don't call ``index.query`` concurrently from elsewhere).
+      max_batch: most query rows coalesced into one ``index.query`` call.
+      cache_size: LRU capacity in cached *rows* (0 disables the cache).
+      cache_quant: coordinate quantum of the cache key; queries closer
+        than this per-axis collide onto one cached answer.
+      pad_pow2: round each batch's row count up to a power of two (with
+        duplicated rows) so jit sees few shapes.  Padding rows are real
+        queries to the fronted index — they never appear in served
+        results or the server's own meters, but the *index's* counters
+        (``queries_served``, warm-start state) do include them; compare
+        server meters, not ``stats()["index"]``, when reconciling request
+        counts.  Set False to trade compile churn for exact index
+        counters.
+      max_wait_ms: how long the worker thread idles waiting for arrivals
+        before re-checking (worker mode only; no artificial batching
+        delay is ever added — a batch forms from whatever is pending).
+    """
+
+    def __init__(
+        self,
+        index,
+        *,
+        max_batch: int = 512,
+        cache_size: int = 4096,
+        cache_quant: float = 1e-6,
+        pad_pow2: bool = True,
+        max_wait_ms: float = 2.0,
+    ):
+        self.index = index
+        self.max_batch = int(max_batch)
+        self.cache_size = int(cache_size)
+        self.cache_quant = float(cache_quant)
+        self.pad_pow2 = bool(pad_pow2)
+        self.max_wait_ms = float(max_wait_ms)
+
+        self._lock = threading.RLock()
+        self._serve_lock = threading.Lock()  # serializes index.query calls
+        self._arrived = threading.Condition(self._lock)
+        # (spec, metric) -> deque of (ticket, local_row, row (d,))
+        self._queues: "OrderedDict[tuple, deque]" = OrderedDict()
+        self._meters: dict = {}  # (kind, k, metric) -> _Meter
+        self._cache: "OrderedDict[tuple, tuple]" = OrderedDict()
+        self._worker: Optional[threading.Thread] = None
+        self._stop = False
+        self._submitted = 0
+        self._served = 0
+
+    # -- public API --------------------------------------------------------
+
+    def submit(self, queries, spec: QuerySpec, *, metric: str = "l2") -> Ticket:
+        """Enqueue ``queries`` ((d,) or (Q, d)) under ``spec``; returns a
+        :class:`Ticket` immediately.  Rows already in the cache are served
+        on the spot; the rest wait for a batch."""
+        if not isinstance(spec, QuerySpec):
+            raise TypeError(
+                f"spec must be a QuerySpec, got {type(spec).__name__}"
+            )
+        spec.validate()
+        rows = np.asarray(queries, np.float32)
+        if rows.ndim == 1:
+            rows = rows[None, :]
+        if rows.ndim != 2 or rows.shape[1] != self.index.dim:
+            raise ValueError(
+                f"queries must be (Q, {self.index.dim}) or "
+                f"({self.index.dim},), got {rows.shape}"
+            )
+        if rows.shape[0] == 0:
+            raise ValueError("cannot submit an empty query batch")
+        ticket = Ticket(self, spec, metric, rows.shape[0])
+        meter = self._meter(spec, metric)
+        with self._lock:
+            self._submitted += 1
+            meter.requests += 1
+            meter.rows += rows.shape[0]
+            queue = self._queues.setdefault((spec, metric), deque())
+            for li in range(rows.shape[0]):
+                hit = self._cache_get(spec, metric, rows[li])
+                if hit is not None:
+                    meter.cache_hits += 1
+                    ticket._asm["cache_hits"] += 1
+                    self._fill_row(ticket, li, hit)
+                else:
+                    meter.cache_misses += 1
+                    queue.append((ticket, li, rows[li]))
+            if ticket._rows_left == 0:
+                self._finalize(ticket, plan="cache")
+            self._arrived.notify_all()
+        return ticket
+
+    def step(self) -> int:
+        """Serve one microbatch from the (spec, metric) queue whose head
+        request has waited longest (FIFO across buckets — no starvation).
+        Returns the number of query rows served (0 = nothing pending).
+        This is the whole serving engine; the worker thread just loops it.
+        """
+        with self._lock:
+            key, queue = self._pick_queue()
+            if key is None:
+                return 0
+            spec, metric = key
+            batch = []
+            while queue and len(batch) < self.max_batch:
+                batch.append(queue.popleft())
+            if not queue:
+                self._queues.pop(key, None)
+        return self._run_batch(spec, metric, batch)
+
+    def drain(self) -> int:
+        """Serve until every pending row is answered; returns rows served."""
+        total = 0
+        while True:
+            n = self.step()
+            if n == 0:
+                return total
+            total += n
+
+    def start(self) -> None:
+        """Spawn the background worker thread (idempotent)."""
+        with self._lock:
+            if self._worker_alive():
+                return
+            self._stop = False
+            self._worker = threading.Thread(
+                target=self._worker_loop, name="NeighborServer", daemon=True
+            )
+            self._worker.start()
+
+    def stop(self, *, drain: bool = True) -> None:
+        """Stop the worker thread; by default serves what is pending first."""
+        with self._lock:
+            worker = self._worker
+            self._stop = True
+            self._arrived.notify_all()
+        if worker is not None:
+            worker.join()
+        with self._lock:
+            self._worker = None
+        if drain:
+            self.drain()
+
+    def stats(self) -> dict:
+        """Serving counters: totals, cache, per-bucket latency/throughput
+        meters, and the fronted index's own ``stats()``."""
+        with self._lock:
+            buckets = {
+                f"{kind}/k={k}/{metric}": m.summary(
+                    self._bucket_depth(kind, k, metric)
+                )
+                for (kind, k, metric), m in self._meters.items()
+            }
+            hits = sum(m.cache_hits for m in self._meters.values())
+            misses = sum(m.cache_misses for m in self._meters.values())
+            return {
+                "submitted": self._submitted,
+                "served": self._served,
+                "pending_rows": self._depth(),
+                "worker_running": self._worker_alive(),
+                "cache": {
+                    "rows": len(self._cache),
+                    "capacity": self.cache_size,
+                    "hits": hits,
+                    "misses": misses,
+                    "hit_rate": (
+                        round(hits / (hits + misses), 4)
+                        if (hits + misses) else 0.0
+                    ),
+                },
+                "buckets": buckets,
+                "index": self.index.stats(),
+            }
+
+    # -- internals ---------------------------------------------------------
+
+    def _meter(self, spec, metric) -> _Meter:
+        key = (spec.kind, getattr(spec, "k", None), metric)
+        with self._lock:
+            m = self._meters.get(key)
+            if m is None:
+                m = self._meters[key] = _Meter()
+            return m
+
+    def _bucket_depth(self, kind, k, metric) -> int:
+        return sum(
+            len(q)
+            for (sp, me), q in self._queues.items()
+            if sp.kind == kind and getattr(sp, "k", None) == k and me == metric
+        )
+
+    def _depth(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    def _worker_alive(self) -> bool:
+        w = self._worker
+        return w is not None and w.is_alive() and w is not threading.current_thread()
+
+    def _pick_queue(self):
+        """The queue whose head request has waited longest.  FIFO across
+        buckets: every served batch removes the globally oldest pending
+        request, so no bucket starves however lopsided the load — and the
+        whole chosen queue still coalesces into the batch, so batching
+        depth is unaffected where it matters (the busy bucket's head is
+        usually also the oldest)."""
+        best, best_t = None, None
+        for key, q in self._queues.items():
+            if not q:
+                continue
+            t = q[0][0].submitted_at
+            if best_t is None or t < best_t:
+                best, best_t = key, t
+        return (best, self._queues[best]) if best is not None else (None, None)
+
+    def _worker_loop(self):
+        while True:
+            with self._lock:
+                if self._stop:
+                    return
+                if self._depth() == 0:
+                    self._arrived.wait(self.max_wait_ms / 1e3)
+                    continue
+            self.step()
+
+    # cache ------------------------------------------------------------
+
+    def _cache_key(self, spec, metric, row) -> tuple:
+        q = np.round(np.asarray(row, np.float64) / self.cache_quant)
+        return (spec, metric, q.astype(np.int64).tobytes())
+
+    def _cache_get(self, spec, metric, row):
+        if self.cache_size <= 0:
+            return None
+        key = self._cache_key(spec, metric, row)
+        hit = self._cache.get(key)
+        if hit is not None:
+            self._cache.move_to_end(key)
+        return hit
+
+    def _cache_put(self, spec, metric, row, payload) -> None:
+        if self.cache_size <= 0:
+            return
+        key = self._cache_key(spec, metric, row)
+        self._cache[key] = payload
+        self._cache.move_to_end(key)
+        while len(self._cache) > self.cache_size:
+            self._cache.popitem(last=False)
+
+    # batch execution --------------------------------------------------
+
+    def _run_batch(self, spec, metric, batch) -> int:
+        m = len(batch)
+        if m == 0:
+            return 0
+        rows = np.stack([row for (_, _, row) in batch])
+        m_pad = _next_pow2(m) if self.pad_pow2 else m
+        if m_pad > m:
+            # pad with copies of row 0: every backend treats them as real
+            # queries (cheap, exact), and they are sliced off below
+            rows = np.concatenate([rows, np.repeat(rows[:1], m_pad - m, 0)])
+        t0 = time.perf_counter()
+        try:
+            with self._serve_lock:  # one index.query in flight at a time
+                res = self.index.query(rows, spec, metric=metric)
+        except BaseException as e:
+            # fail every ticket in the batch rather than stranding waiters
+            with self._lock:
+                for ticket, _, _ in batch:
+                    self._fail(ticket, e)
+            return m
+        service = time.perf_counter() - t0
+        plan = res.timings.get("plan", "native")
+
+        is_range = isinstance(res, RangeResult)
+        tickets = set()
+        with self._lock:
+            for bi, (ticket, li, row) in enumerate(batch):
+                if ticket._event.is_set():
+                    continue  # an earlier batch of this ticket failed
+                payload = (
+                    self._range_row(res, bi)
+                    if is_range
+                    else self._knn_row(res, bi)
+                )
+                self._cache_put(spec, metric, row, payload)
+                self._fill_row(ticket, li, payload)
+                # per-row share of the batch's work; float so the
+                # remainder isn't truncated away row by row
+                ticket._asm["n_tests"] += res.n_tests / m_pad
+                ticket._asm["batch_sizes"].append(m)
+                tickets.add(ticket)
+            self._meter(spec, metric).record_batch(m)
+            for ticket in tickets:
+                if ticket._rows_left == 0:
+                    self._finalize(ticket, plan=plan, service=service)
+        return m
+
+    @staticmethod
+    def _knn_row(res: KNNResult, i: int) -> tuple:
+        return (
+            "knn",
+            res.dists[i].copy(),
+            res.idxs[i].copy(),
+            None if res.found is None else int(res.found[i]),
+        )
+
+    @staticmethod
+    def _range_row(res: RangeResult, i: int) -> tuple:
+        idx, dst = res.neighbors(i)
+        return (
+            "range",
+            idx.copy(),
+            dst.copy(),
+            None if res.truncated is None else bool(res.truncated[i]),
+            float(res.radius),
+        )
+
+    def _fill_row(self, ticket: Ticket, li: int, payload) -> None:
+        ticket._asm["rows"][li] = payload
+        ticket._rows_left -= 1
+
+    def _fail(self, ticket: Ticket, error: BaseException) -> None:
+        if ticket._event.is_set():
+            return
+        ticket._error = error
+        self._served += 1
+        self._meter(ticket.spec, ticket.metric).latencies.append(
+            time.perf_counter() - ticket.submitted_at
+        )
+        ticket._event.set()
+
+    def _finalize(self, ticket: Ticket, *, plan: str, service: float = 0.0):
+        try:
+            ticket._result = self._assemble(ticket, plan, service)
+        except BaseException as e:  # surfaced at ticket.result()
+            ticket._error = e
+        self._served += 1
+        self._meter(ticket.spec, ticket.metric).latencies.append(
+            time.perf_counter() - ticket.submitted_at
+        )
+        ticket._event.set()
+
+    def _assemble(self, ticket: Ticket, plan: str, service: float):
+        rows = ticket._asm["rows"]
+        timings = {
+            "plan": plan,
+            "server_batch_rows": (
+                max(ticket._asm["batch_sizes"])
+                if ticket._asm["batch_sizes"] else 0
+            ),
+            "server_cache_hits": ticket._asm["cache_hits"],
+            "service_seconds": service,
+            "request_seconds": time.perf_counter() - ticket.submitted_at,
+        }
+        if rows and rows[0][0] == "range":
+            offsets = np.zeros((len(rows) + 1,), np.int64)
+            for i, r in enumerate(rows):
+                offsets[i + 1] = offsets[i] + len(r[1])
+            idxs = (
+                np.concatenate([r[1] for r in rows])
+                if offsets[-1] else np.empty((0,), np.int32)
+            ).astype(np.int32)
+            dists = (
+                np.concatenate([r[2] for r in rows])
+                if offsets[-1] else np.empty((0,), np.float32)
+            ).astype(np.float32)
+            truncated = (
+                None
+                if any(r[3] is None for r in rows)
+                else np.asarray([r[3] for r in rows], bool)
+            )
+            return RangeResult(
+                offsets=offsets,
+                idxs=idxs,
+                dists=dists,
+                radius=rows[0][4],
+                n_tests=int(round(ticket._asm["n_tests"])),
+                backend=self.index.backend_name,
+                metric=ticket.metric,
+                truncated=truncated,
+                timings=timings,
+            )
+        dists = np.stack([r[1] for r in rows])
+        idxs = np.stack([r[2] for r in rows])
+        found = (
+            None
+            if any(r[3] is None for r in rows)
+            else np.asarray([r[3] for r in rows], np.int64)
+        )
+        return KNNResult(
+            dists=dists,
+            idxs=idxs,
+            n_tests=int(round(ticket._asm["n_tests"])),
+            backend=self.index.backend_name,
+            metric=ticket.metric,
+            found=found,
+            timings=timings,
+        )

@@ -110,6 +110,12 @@ def distributed_trueknn(
     """Multi-round unbounded kNN over mesh-sharded points (host-orchestrated
     rounds, paper Alg. 3).  Query retirement compacts between rounds.
 
+    Returns ``(dists, idxs, rounds, n_tests)``.  ``n_tests`` counts
+    candidate distance evaluations (the paper's work metric): the dense
+    streaming engine evaluates every (query, point) pair each round, so the
+    count is exactly ``sum over rounds of padded_alive * N`` — padding rows
+    included, since they are real work on the mesh.
+
     HONESTY NOTE (see DESIGN.md): with the dense streaming engine a single
     pass is already exact, so the multi-round structure only pays off when
     the per-round engine is radius-bounded and cheaper — i.e. with per-shard
@@ -156,11 +162,14 @@ def distributed_trueknn(
         d2, idx, cnt = jax.jit(fn)(
             pts_j, jax.device_put(q, qsh), jax.device_put(qid, idsh)
         )
-        return np.asarray(d2)[:m], np.asarray(idx)[:m], np.asarray(cnt)[:m]
+        tests = m_pad * n  # dense engine: every padded row vs every point
+        return np.asarray(d2)[:m], np.asarray(idx)[:m], np.asarray(cnt)[:m], tests
 
     rounds = 0
+    n_tests = 0
     while alive.size and rounds < max_rounds:
-        d2, idx, cnt = run_round(q_all[alive], qid_all[alive], r)
+        d2, idx, cnt, tests = run_round(q_all[alive], qid_all[alive], r)
+        n_tests += tests
         resolved = cnt >= k
         done = alive[resolved]
         out_d[done] = d2[resolved]
@@ -170,8 +179,9 @@ def distributed_trueknn(
         rounds += 1
 
     if alive.size:  # tail: one exact unbounded pass
-        d2, idx, _ = run_round(q_all[alive], qid_all[alive], np.inf)
+        d2, idx, _, tests = run_round(q_all[alive], qid_all[alive], np.inf)
+        n_tests += tests
         out_d[alive] = d2
         out_i[alive] = idx
 
-    return np.sqrt(np.maximum(out_d, 0)), out_i, rounds
+    return np.sqrt(np.maximum(out_d, 0)), out_i, rounds, n_tests

@@ -1,13 +1,19 @@
 """Serving launcher: batched LM serving (continuous batching) on any arch,
-or neighbor-search serving on the planned QuerySpec surface.
+or neighbor-search serving through the ``NeighborServer`` front-end.
 
     # LM serving (continuous batching)
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b \
         --requests 16 --max-new 24
 
-    # neighbor-search serving: resident index, streaming query batches
+    # neighbor search, open loop: Poisson arrivals hit the microbatching
+    # server at --rate requests/second (each request = one query point)
     PYTHONPATH=src python -m repro.launch.serve --mode knn \
-        --backend trueknn --spec hybrid --k 8 --metric l2 --batches 6
+        --backend trueknn --spec hybrid --k 8 --arrival open --rate 500
+
+    # closed loop (the pre-server demo shape, kept for comparison): one
+    # fixed-size batch in flight at a time
+    PYTHONPATH=src python -m repro.launch.serve --mode knn \
+        --arrival closed --batches 6 --batch-size 512
 """
 
 from __future__ import annotations
@@ -46,16 +52,17 @@ def _run_lm(args):
     print("sample completion:", outs[0][:12])
 
 
-def _make_spec(args, warm_dists):
+def _make_spec(args, warm_dists, index):
     """Spec from CLI knobs; radius defaults to the warm batch's median
-    k-th-NN distance when not given (a radius most queries can fill)."""
-    from repro.api import HybridSpec, KnnSpec, RangeSpec
+    *finite* k-th-NN distance (falling back to the index's sampled radius
+    when no warm query filled k — see ``warm_default_radius``)."""
+    from repro.api import HybridSpec, KnnSpec, RangeSpec, warm_default_radius
 
     if args.spec == "knn":
         return KnnSpec(args.k)
     r = args.radius
     if r is None:
-        r = float(np.median(warm_dists[:, -1]))
+        r = warm_default_radius(warm_dists, index)
     if args.spec == "range":
         return RangeSpec(r, max_neighbors=args.max_neighbors)
     if args.spec == "hybrid":
@@ -63,8 +70,74 @@ def _make_spec(args, warm_dists):
     raise SystemExit(f"unknown --spec {args.spec!r}")
 
 
+def _describe(res):
+    from repro.api import RangeResult, dropped_counts
+
+    plan = res.timings.get("plan", "native")
+    if isinstance(res, RangeResult):
+        rows_max = int(res.counts.max()) if res.n_queries else 0
+        return f"plan={plan} nnz={len(res.idxs)} rows_max={rows_max}"
+    partial, empty = dropped_counts(res.dists)
+    return f"plan={plan} dropped_partial={partial} dropped_empty={empty}"
+
+
+def _closed_loop(server, spec, args, pts, rng):
+    """One batch in flight at a time (the pre-server demo loop, through the
+    server so its cache/metering still apply)."""
+    lat = []
+    for b in range(args.batches):
+        qs = pts[rng.integers(0, args.n, args.batch_size)] + rng.normal(
+            scale=0.5, size=(args.batch_size, pts.shape[1])
+        ).astype(np.float32)
+        t0 = time.perf_counter()
+        res = server.submit(qs, spec, metric=args.metric).result()
+        dt = time.perf_counter() - t0
+        lat.append(dt)
+        print(
+            f"batch {b}: {dt*1e3:.0f} ms "
+            f"({dt/args.batch_size*1e6:.0f} us/query) {_describe(res)}"
+        )
+    print(
+        f"p50 batch latency {np.median(lat)*1e3:.0f} ms "
+        f"(steady state {min(lat)*1e3:.0f} ms)"
+    )
+
+
+def _open_loop(server, spec, args, pts, rng):
+    """Poisson open-loop arrivals: requests (one query point each) arrive at
+    ``--rate`` req/s regardless of completions — the serving regime where
+    microbatching actually earns its keep."""
+    from repro.api.server import poisson_open_loop
+
+    n_req = args.batches * args.batch_size
+    qs = pts[rng.integers(0, args.n, n_req)] + rng.normal(
+        scale=0.5, size=(n_req, pts.shape[1])
+    ).astype(np.float32)
+    results, wall, lat = poisson_open_loop(
+        server, qs, spec, args.rate, rng, metric=args.metric
+    )
+    partial = sum(dropped_counts_row(r) for r in results)
+    print(
+        f"open loop: {n_req} requests in {wall:.2f}s "
+        f"(offered {args.rate:.0f}/s, served {n_req/wall:.0f}/s)"
+    )
+    print(
+        f"request latency p50 {np.percentile(lat, 50)*1e3:.1f} ms "
+        f"p99 {np.percentile(lat, 99)*1e3:.1f} ms; "
+        f"dropped_partial={partial}"
+    )
+
+
+def dropped_counts_row(res) -> int:
+    from repro.api import RangeResult, dropped_counts
+
+    if isinstance(res, RangeResult):
+        return 0
+    return dropped_counts(res.dists)[0]
+
+
 def _run_knn(args):
-    from repro.api import KnnSpec, RangeResult, build_index
+    from repro.api import KnnSpec, NeighborServer, build_index
     from repro.core import make_dataset
 
     pts = make_dataset(args.dataset, args.n, seed=0)
@@ -82,36 +155,30 @@ def _run_knn(args):
         pts[rng.integers(0, args.n, args.batch_size)], KnnSpec(args.k),
         metric=args.metric,
     )
-    spec = _make_spec(args, warm.dists)
-    print(f"serving {args.batches} batches of {args.batch_size}: {spec} "
-          f"metric={args.metric}")
-
-    lat = []
-    for b in range(args.batches):
-        qs = pts[rng.integers(0, args.n, args.batch_size)] + rng.normal(
-            scale=0.5, size=(args.batch_size, pts.shape[1])
-        ).astype(np.float32)
-        t0 = time.perf_counter()
-        res = index.query(qs, spec, metric=args.metric)
-        dt = time.perf_counter() - t0
-        lat.append(dt)
-        plan = res.timings.get("plan", "native")
-        if isinstance(res, RangeResult):
-            shape = f"nnz={len(res.idxs)} rows_max={int(res.counts.max())}"
-        else:
-            shape = (
-                f"rounds={res.n_rounds} "
-                f"dropped={int(np.isinf(res.dists).sum())}"
-            )
-        print(
-            f"batch {b}: {dt*1e3:.0f} ms "
-            f"({dt/args.batch_size*1e6:.0f} us/query) plan={plan} {shape}"
-        )
-    print(
-        f"p50 batch latency {np.median(lat)*1e3:.0f} ms "
-        f"(steady state {min(lat)*1e3:.0f} ms)"
+    spec = _make_spec(args, warm.dists, index)
+    server = NeighborServer(
+        index, max_batch=args.batch_size, cache_size=args.cache_size
     )
-    print(f"index stats: {index.stats()}")
+    print(
+        f"serving ({args.arrival} loop): {spec} metric={args.metric} "
+        f"max_batch={args.batch_size} cache={args.cache_size}"
+    )
+
+    if args.arrival == "closed":
+        _closed_loop(server, spec, args, pts, rng)
+    else:
+        _open_loop(server, spec, args, pts, rng)
+
+    s = server.stats()
+    for name, b in s["buckets"].items():
+        print(
+            f"bucket {name}: {b['requests']} reqs in {b['batches']} batches "
+            f"(mean {b['mean_batch_rows']} rows/batch, hist "
+            f"{b['batch_size_hist']}), p50 {b['latency_p50_ms']} ms "
+            f"p99 {b['latency_p99_ms']} ms, cache_hit_rate "
+            f"{b['cache_hit_rate']}"
+        )
+    print(f"index stats: {s['index']}")
 
 
 def main():
@@ -133,6 +200,15 @@ def main():
     ap.add_argument("--metric", default="l2")
     ap.add_argument("--batches", type=int, default=5)
     ap.add_argument("--batch-size", type=int, default=512)
+    ap.add_argument(
+        "--arrival", choices=["open", "closed"], default="closed",
+        help="open: Poisson arrivals onto the microbatching server at "
+        "--rate req/s; closed: one batch in flight at a time",
+    )
+    ap.add_argument("--rate", type=float, default=500.0,
+                    help="open-loop offered load, requests/second")
+    ap.add_argument("--cache-size", type=int, default=4096,
+                    help="NeighborServer LRU result-cache rows (0 disables)")
     args = ap.parse_args()
     if args.mode == "knn":
         _run_knn(args)

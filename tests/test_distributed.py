@@ -143,10 +143,11 @@ from repro.core.datasets import make_dataset
 devs = np.array(jax.devices()).reshape(2, 4)
 mesh = Mesh(devs, ("data", "model"))
 pts = make_dataset("porto", 1024, seed=3)
-d, idx, rounds = distributed_trueknn(pts, 4, mesh)
+d, idx, rounds, n_tests = distributed_trueknn(pts, 4, mesh)
 bd, bi, _ = brute_knn(pts, 4)
 ok = np.allclose(np.sort(d,1), np.sort(np.asarray(bd),1), rtol=1e-3, atol=1e-5)
-print("MATCH", bool(ok), "rounds", rounds)
+counted = n_tests >= 1024 * 1024  # at least one full dense pass was metered
+print("MATCH", bool(ok and counted), "rounds", rounds, "tests", n_tests)
 """,
     )
     assert "MATCH True" in out
