@@ -63,7 +63,7 @@ def main(n=16_000, k=8, requests_per_load=192,
     for rate in offered_loads:
         server = NeighborServer(index, cache_size=0)
         _, wall, lat = poisson_open_loop(server, qs, spec, rate, rng)
-        bucket = server.stats()["buckets"][f"knn/k={k}/l2"]
+        bucket = server.stats()["buckets"][f"default/knn/k={k}/l2"]
         cell = {
             "offered_per_s": rate,
             "achieved_per_s": round(requests_per_load / wall, 1),

@@ -27,6 +27,7 @@ def main() -> None:
         bench_query_plans,
         bench_rounds,
         bench_serve,
+        bench_shards,
         bench_start_radius,
         bench_work_counts,
     )
@@ -61,6 +62,11 @@ def main() -> None:
     with open("BENCH_serve.json", "w") as f:
         json.dump(serve_summary, f, indent=2, default=str)
     print("# wrote BENCH_serve.json", flush=True)
+    _section("sharded fabric (merge identity, shard pruning, latency)")
+    shards_summary = bench_shards.main()
+    with open("BENCH_shards.json", "w") as f:
+        json.dump(shards_summary, f, indent=2, default=str)
+    print("# wrote BENCH_shards.json", flush=True)
     _section("kernel microbench")
     bench_kernel.main()
     print(f"# total {time.time()-t0:.1f}s", flush=True)

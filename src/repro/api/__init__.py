@@ -28,11 +28,18 @@ kNN/hybrid answers share ``KNNResult`` (dists, idxs, found, rounds,
 timings); range answers are ragged and come back as ``RangeResult`` in CSR
 layout (``offsets``/``idxs``/``dists``, rows nearest-first).
 
-For serving many clients off one resident index, ``NeighborServer``
-(``repro.api.server``) fronts any index with submit/poll ticket futures,
-microbatching (pending requests coalesce into padded per-(spec, metric)
-batches), an LRU result cache over quantized query coordinates, and
-per-bucket latency/throughput metering — see docs/api.md.
+For scale-out, ``backend="sharded"`` composes any leaf backend into a
+spatially-partitioned fabric (``repro.core.partition`` split, per-shard
+AABBs, radius-aware shard pruning, exact ``repro.core.result`` merges) —
+answers are bit-identical to the monolithic index, work is not.
+
+For serving many clients, ``NeighborServer`` (``repro.api.server``)
+fronts a *named registry* of resident indexes with submit/poll ticket
+futures routed by index name, microbatching (pending requests coalesce
+into padded per-(index, spec, metric) batches, Morton-reordered for
+locality), admission control (``max_queue`` load shedding), an LRU result
+cache over quantized query coordinates, and per-tenant-bucket
+latency/throughput metering — see docs/api.md.
 
 Deprecated (warn once per process, removed in a future PR):
 
@@ -61,7 +68,13 @@ from .query import HybridSpec, KnnSpec, QuerySpec, RangeSpec
 from . import backends  # registers the built-in backends  # noqa: E402
 from .index import NeighborIndex, build_index
 from .registry import available_backends, get_backend, register_backend
-from .server import NeighborServer, Ticket, dropped_counts, warm_default_radius
+from .server import (
+    AdmissionError,
+    NeighborServer,
+    Ticket,
+    dropped_counts,
+    warm_default_radius,
+)
 
 __all__ = [
     "KNNResult",
@@ -80,6 +93,7 @@ __all__ = [
     "build_index",
     "NeighborServer",
     "Ticket",
+    "AdmissionError",
     "warm_default_radius",
     "dropped_counts",
     "available_backends",

@@ -7,6 +7,9 @@ Importing this package registers every built-in backend with the registry:
   trueknn       multi-round unbounded search with grid cache + warm start
                 (paper Alg. 3; the serving default)
   distributed   mesh-sharded multi-round search (hypercube top-k merge)
+  sharded       spatially-partitioned composite of child indexes with
+                radius-aware shard pruning (RTNN-style search-space
+                restriction over any leaf backend)
 
 Third-party backends register the same way — decorate a ``NeighborIndex``
 subclass with ``@register_backend("name")`` and import the module.
@@ -15,11 +18,13 @@ subclass with ``@register_backend("name")`` and import the module.
 from .brute import BruteIndex
 from .distributed import DistributedIndex
 from .fixed_radius import FixedRadiusIndex
+from .sharded import ShardedIndex
 from .trueknn import TrueKNNIndex
 
 __all__ = [
     "BruteIndex",
     "DistributedIndex",
     "FixedRadiusIndex",
+    "ShardedIndex",
     "TrueKNNIndex",
 ]

@@ -1,0 +1,486 @@
+"""ShardedIndex — a spatially-partitioned composite index.
+``backend="sharded"``.
+
+TrueKNN's iterative radius growth (paper Alg. 3) is embarrassingly
+partitionable: split the cloud spatially, and a query whose current search
+radius is r can only find neighbors in shards whose AABB lies within r —
+exactly the search-space restriction RTNN exploits.  This backend is that
+composition as a *fabric*: a ``repro.core.partition`` split (Morton or
+grid cells, per-shard AABBs) feeds N child indexes of any registered
+backend, the planner's :func:`repro.api.planner.shard_visit_mask` prunes
+shard visits against each query's current radius, and
+``repro.core.result.merge_knn`` / ``merge_range`` fold the per-shard
+answers back together — bit-identical to the equivalent monolithic index,
+because shards preserve global index order (tie-breaking survives) and
+bounds are deflated so float32 engine rounding can only cost an extra
+visit, never a missed neighbor.
+
+Per spec kind:
+
+* ``KnnSpec(k)`` runs TrueKNN-style rounds over *shards*: each round grows
+  a radius cut and visits only the unvisited shards whose bound is within
+  it (every unresolved query always visits at least its nearest unvisited
+  shard, so a batch needs at most S rounds); a query resolves once its
+  k-th best candidate is closer than every unvisited shard's bound.
+  ``start_radius`` is a seed here and is ignored (children schedule
+  themselves); ``stop_radius`` raises ``NotImplementedError`` so the
+  planner serves it through the cached companion-trueknn fallback with
+  exact monolithic semantics (same route as the distributed backend).
+* ``RangeSpec(r)`` / ``HybridSpec(k, r)`` cull shards outside ``r`` up
+  front — one pruned pass, then the merge.
+
+Every pruned plan tags ``timings["plan"] = "sharded/pruned=<m-of-n>"``
+(m of the n potential (query, shard) visits skipped), and ``stats()``
+accumulates ``shard_visits`` / ``shard_visits_pruned`` across the index's
+life, which is what ``benchmarks/bench_shards.py`` asserts on.
+
+cfg:
+  n_shards:      partition arity (default 8; clamped to N).
+  child_backend: registry name of the per-shard engine (default
+                 "trueknn"; anything registered except "sharded" itself).
+  partition:     "morton" | "grid" (see ``repro.core.partition``).
+  growth:        per-round radius-cut multiplier for kNN rounds (2.0).
+  child_cfg:     cfg dict forwarded to every child's ``build_index``.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.core.partition import aabb_min_dists, partition_points
+from repro.core.result import (
+    KNNResult,
+    RangeResult,
+    RoundStats,
+    merge_knn,
+    merge_range,
+    topk_merge_rows,
+)
+
+from ..index import NeighborIndex, build_index
+from ..metrics import Metric
+from ..query import HybridSpec, KnnSpec, RangeSpec
+from ..registry import register_backend
+
+__all__ = ["ShardedIndex", "PRUNE_SLACK"]
+
+#: Relative deflation applied to AABB lower bounds before any pruning
+#: comparison: the bounds are exact over the reals, but child engines
+#: round float32 distances, so a bound must under-promise by more than the
+#: engines can under-round.  1e-4 covers the accumulated error of every
+#: engine form in this repo with orders of magnitude to spare; the cost is
+#: only the occasional shard visited that pure math could have skipped.
+PRUNE_SLACK = 1e-4
+
+
+def _deflate(bounds: np.ndarray) -> np.ndarray:
+    return np.maximum(bounds * (1.0 - PRUNE_SLACK) - 1e-12, 0.0)
+
+
+@register_backend("sharded")
+class ShardedIndex(NeighborIndex):
+    """Composite index over spatially-partitioned child indexes."""
+
+    native_metrics = frozenset({"l2", "l1", "linf", "cosine"})
+    knn_start_radius_semantics = "seed"
+
+    def __init__(
+        self,
+        points,
+        *,
+        n_shards: int = 8,
+        child_backend: str = "trueknn",
+        partition: str = "morton",
+        growth: float = 2.0,
+        child_cfg: Optional[dict] = None,
+    ):
+        super().__init__(points)
+        if child_backend == "sharded":
+            raise ValueError(
+                "sharded children of a sharded index are not supported; "
+                "pick a leaf backend (trueknn / fixed_radius / brute / ...)"
+            )
+        assert growth > 1.0, "radius-cut growth factor must exceed 1"
+        self._growth = float(growth)
+        self._child_backend = child_backend
+        self._child_cfg = dict(child_cfg or {})
+        self._part = partition_points(
+            self._pts, n_shards, method=partition
+        )
+        self._children = [
+            build_index(
+                self._pts[idx], backend=child_backend, **self._child_cfg
+            )
+            for idx in self._part.shards
+        ]
+        # local child index -> global index, with the child's sentinel
+        # (its own N) mapped to the global sentinel (the cloud's N)
+        self._gmaps = []
+        for idx in self._part.shards:
+            g = np.empty((len(idx) + 1,), np.int32)
+            g[:-1] = idx
+            g[-1] = self.n_points
+            self._gmaps.append(g)
+        self._aabb_views: dict = {}  # metric name -> transformed AABBs
+        self._c = {
+            "batches": 0,
+            "queries_served": 0,
+            "shard_visits": 0,
+            "shard_visits_pruned": 0,
+            "shard_rounds": 0,
+        }
+
+    # -- geometry ----------------------------------------------------------
+
+    @property
+    def n_shards(self) -> int:
+        return self._part.n_shards
+
+    def _transformed_aabbs(self, metric: Metric) -> np.ndarray:
+        """Per-shard AABBs over the metric's transformed cloud (cached);
+        the monotone L2 reduction makes their L2 excess bound an exact
+        metric-space bound after ``dist_from_l2``."""
+        ab = self._aabb_views.get(metric.name)
+        if ab is None:
+            ab = np.empty_like(self._part.aabbs)
+            for s, idx in enumerate(self._part.shards):
+                t = metric.transform_points(self._pts[idx])
+                ab[s, 0] = t.min(0)
+                ab[s, 1] = t.max(0)
+            self._aabb_views[metric.name] = ab
+        return ab
+
+    def _bounds(self, q: np.ndarray, metric: Metric) -> np.ndarray:
+        """(Q, S) deflated metric-space lower bounds (0 = cannot prune)."""
+        if metric.name in ("l1", "linf"):
+            b = aabb_min_dists(self._part.aabbs, q, metric.name)
+        elif metric.name == "l2":
+            b = aabb_min_dists(self._part.aabbs, q, "l2")
+        elif metric.has_l2_view:
+            tq = metric.transform_points(np.asarray(q, np.float32))
+            b = np.asarray(
+                metric.dist_from_l2(
+                    aabb_min_dists(self._transformed_aabbs(metric), tq, "l2")
+                ),
+                np.float64,
+            )
+        else:  # unprunable metric: visit everything, stay exact
+            return np.zeros((q.shape[0], self.n_shards))
+        return _deflate(b)
+
+    # -- shared plumbing ---------------------------------------------------
+
+    def _prep(self, queries):
+        """(rows, self_ids): explicit query rows plus, for the dataset-
+        queries-itself form, each row's own global index (children get
+        explicit rows and one extra candidate slot; the self match is
+        stripped after the merge, reproducing monolithic self-exclusion —
+        duplicates of the query point at other indices are kept, exactly
+        as ``query_ids`` exclusion keeps them)."""
+        if queries is None:
+            return self._pts, np.arange(self.n_points, dtype=np.int64)
+        return np.asarray(queries, np.float32), None
+
+    def _query_child(self, s: int, rows, spec, metric: Metric):
+        res = self._children[s].query(rows, spec, metric=metric.name)
+        return res
+
+    def _scatter_knn(self, res, sel, q_total: int, width: int, s: int):
+        """Lift a child's subset answer to a full-Q, global-index part."""
+        d = np.full((q_total, width), np.inf, np.float32)
+        i = np.full((q_total, width), self.n_points, np.int32)
+        cd = np.asarray(res.dists)
+        ci = self._gmaps[s][np.asarray(res.idxs)]
+        d[sel, : cd.shape[1]] = cd
+        i[sel, : ci.shape[1]] = ci
+        # child `found` values are shard-capped counts that do NOT
+        # partition a global count — dropped here so merge_knn never
+        # materializes their misleading sum (the backend reports the
+        # returned-neighbor count instead)
+        return KNNResult(
+            dists=d,
+            idxs=i,
+            n_tests=int(res.n_tests),
+            backend=res.backend,
+            metric=res.metric,
+            rounds=res.rounds,
+        )
+
+    def _scatter_range(self, res, sel, q_total: int, s: int):
+        counts = np.zeros((q_total,), np.int64)
+        counts[sel] = res.counts
+        offsets = np.zeros((q_total + 1,), np.int64)
+        np.cumsum(counts, out=offsets[1:])
+        truncated = None
+        if res.truncated is not None:
+            truncated = np.zeros((q_total,), bool)
+            truncated[sel] = res.truncated
+        return RangeResult(
+            offsets=offsets,
+            idxs=self._gmaps[s][np.asarray(res.idxs)],
+            dists=np.asarray(res.dists, np.float32),
+            radius=res.radius,
+            n_tests=int(res.n_tests),
+            backend=res.backend,
+            metric=res.metric,
+            truncated=truncated,
+        )
+
+    @staticmethod
+    def _strip_self_knn(d, i, self_ids, k: int, sentinel: int):
+        """Drop each row's own-index entry from a (Q, k+1) merged pool and
+        hand back the (Q, k) answer (padding keeps inf/sentinel form)."""
+        mask = i == self_ids[:, None]
+        order = np.argsort(mask, axis=1, kind="stable")  # self slots last
+        rows = np.arange(d.shape[0])[:, None]
+        d = d[rows, order]
+        i = i[rows, order]
+        moved = np.take_along_axis(mask, order, axis=1)
+        d = np.where(moved, np.inf, d)
+        i = np.where(moved, sentinel, i)
+        return d[:, :k], i[:, :k]
+
+    @staticmethod
+    def _strip_self_csr(part: RangeResult, self_ids) -> RangeResult:
+        rows = np.repeat(np.arange(part.n_queries), part.counts)
+        keep = part.idxs != self_ids[rows]
+        counts = np.bincount(
+            rows[keep], minlength=part.n_queries
+        ).astype(np.int64)
+        offsets = np.zeros((part.n_queries + 1,), np.int64)
+        np.cumsum(counts, out=offsets[1:])
+        return RangeResult(
+            offsets=offsets,
+            idxs=part.idxs[keep],
+            dists=part.dists[keep],
+            radius=part.radius,
+            n_tests=part.n_tests,
+            backend=part.backend,
+            metric=part.metric,
+            truncated=part.truncated,
+        )
+
+    def _account(self, q_total: int, visited: int, t0: float, res):
+        from ..planner import shard_plan_tag
+
+        potential = q_total * self.n_shards
+        self._c["batches"] += 1
+        self._c["queries_served"] += q_total
+        self._c["shard_visits"] += visited
+        self._c["shard_visits_pruned"] += potential - visited
+        res.timings.update(
+            plan=shard_plan_tag(visited, potential),
+            shard_visits=visited,
+            shard_potential=potential,
+            query_seconds=time.perf_counter() - t0,
+        )
+        res.backend = self.backend_name
+        return res
+
+    # -- spec execution ----------------------------------------------------
+
+    def execute_knn(self, queries, spec: KnnSpec, metric: Metric) -> KNNResult:
+        if spec.stop_radius is not None:
+            # stop_radius semantics are defined by ONE radius schedule over
+            # the whole cloud; per-shard schedules diverge, so the planner's
+            # companion-trueknn fallback answers with monolithic semantics
+            raise NotImplementedError
+        from ..planner import shard_visit_mask
+
+        t0 = time.perf_counter()
+        q, self_ids = self._prep(queries)
+        q_total, n, s_total = q.shape[0], self.n_points, self.n_shards
+        k = spec.k
+        k_eff = k + (1 if self_ids is not None else 0)
+        pool_d = np.full((q_total, k_eff), np.inf, np.float32)
+        pool_i = np.full((q_total, k_eff), n, np.int32)
+        bounds = self._bounds(q, metric)
+        visited = np.zeros((q_total, s_total), bool)
+        unresolved = np.ones((q_total,), bool)
+        rounds: list = []
+        total_tests = 0
+        total_visits = 0
+        r = 0.0
+        while unresolved.any():
+            tr = time.perf_counter()
+            ub = np.where(visited, np.inf, bounds)
+            floor = ub.min(axis=1)  # per-query nearest unvisited shard
+            pend = floor[unresolved]
+            pend = pend[np.isfinite(pend)]
+            if pend.size:
+                r = max(r * self._growth, float(pend.min()))
+            # the per-query floor guarantees progress: every unresolved
+            # query visits at least its nearest unvisited shard this round
+            cut = np.maximum(r, floor)
+            visit_now = (
+                unresolved[:, None]
+                & ~visited
+                & shard_visit_mask(bounds, cut)
+            )
+            round_tests = 0
+            for s in range(s_total):
+                sel = np.flatnonzero(visit_now[:, s])
+                if not sel.size:
+                    continue
+                k_child = min(k_eff, self._children[s].n_points)
+                res = self._query_child(
+                    s, q[sel], KnnSpec(k_child), metric
+                )
+                round_tests += int(res.n_tests)
+                cd = np.asarray(res.dists)
+                ci = self._gmaps[s][np.asarray(res.idxs)]
+                pool_d[sel], pool_i[sel] = topk_merge_rows(
+                    pool_d[sel], pool_i[sel], cd, ci, k_eff
+                )
+                total_visits += int(sel.size)
+            visited |= visit_now
+            total_tests += round_tests
+            # resolved: the k-th best (self excluded) beats every
+            # unvisited shard's bound — or no shard is left to visit
+            ub = np.where(visited, np.inf, bounds)
+            minub = ub.min(axis=1)
+            if self_ids is not None:
+                has_self = (pool_i == self_ids[:, None]).any(axis=1)
+                kth = np.where(has_self, pool_d[:, k], pool_d[:, k - 1])
+            else:
+                kth = pool_d[:, k - 1]
+            resolved = unresolved & ((kth < minub) | ~np.isfinite(minub))
+            rounds.append(
+                RoundStats(
+                    len(rounds),
+                    float(r),
+                    int(unresolved.sum()),
+                    int(resolved.sum()),
+                    round_tests,
+                    (),
+                    0,
+                    time.perf_counter() - tr,
+                )
+            )
+            unresolved &= ~resolved
+        self._c["shard_rounds"] += len(rounds)
+        if self_ids is not None:
+            d, i = self._strip_self_knn(pool_d, pool_i, self_ids, k, n)
+        else:
+            d, i = pool_d[:, :k], pool_i[:, :k]
+        out = KNNResult(
+            dists=d,
+            idxs=i,
+            n_tests=total_tests,
+            metric=metric.name,
+            # the returned-neighbor count (= min(k, reachable candidates));
+            # per-child "found" values are round-local and do NOT partition
+            # a global count, so summing them would overstate wildly
+            found=np.isfinite(d).sum(axis=1).astype(np.int64),
+            rounds=rounds,
+            final_radius=rounds[-1].radius if rounds else None,
+        )
+        return self._account(q_total, total_visits, t0, out)
+
+    def execute_hybrid(self, queries, spec: HybridSpec, metric: Metric):
+        from ..planner import shard_visit_mask
+
+        t0 = time.perf_counter()
+        q, self_ids = self._prep(queries)
+        q_total, n = q.shape[0], self.n_points
+        k_eff = spec.k + (1 if self_ids is not None else 0)
+        visit = shard_visit_mask(self._bounds(q, metric), spec.radius)
+        parts, visits = [], 0
+        for s in range(self.n_shards):
+            sel = np.flatnonzero(visit[:, s])
+            if not sel.size:
+                continue
+            k_child = min(k_eff, self._children[s].n_points)
+            res = self._query_child(
+                s, q[sel], HybridSpec(k_child, spec.radius), metric
+            )
+            parts.append(self._scatter_knn(res, sel, q_total, k_eff, s))
+            visits += int(sel.size)
+        if parts:
+            out = merge_knn(
+                parts, k_eff, sentinel=n, metric=metric.name
+            )
+        else:  # every shard pruned for every query: nothing in the ball
+            out = KNNResult(
+                dists=np.full((q_total, k_eff), np.inf, np.float32),
+                idxs=np.full((q_total, k_eff), n, np.int32),
+                n_tests=0,
+                metric=metric.name,
+            )
+        if self_ids is not None:
+            out.dists, out.idxs = self._strip_self_knn(
+                out.dists, out.idxs, self_ids, spec.k, n
+            )
+        else:
+            out.dists, out.idxs = out.dists[:, : spec.k], out.idxs[:, : spec.k]
+        # HybridSpec's found contract (>= k iff resolved) with a concrete
+        # meaning: how many in-ball neighbors the answer actually holds
+        # (= min(k, ball population) — exactly the monolithic brute value).
+        # Summed child founds are capped per shard and would overstate.
+        out.found = np.isfinite(out.dists).sum(axis=1).astype(np.int64)
+        return self._account(q_total, visits, t0, out)
+
+    def execute_range(self, queries, spec: RangeSpec, metric: Metric):
+        from ..planner import shard_visit_mask
+
+        t0 = time.perf_counter()
+        q, self_ids = self._prep(queries)
+        q_total = q.shape[0]
+        m = spec.max_neighbors
+        # the self match occupies one in-ball slot in its owning shard's
+        # row; ask for one more so stripping it never loses a neighbor
+        m_child = (m + 1) if (m is not None and self_ids is not None) else m
+        visit = shard_visit_mask(self._bounds(q, metric), spec.radius)
+        parts, visits = [], 0
+        for s in range(self.n_shards):
+            sel = np.flatnonzero(visit[:, s])
+            if not sel.size:
+                continue
+            res = self._query_child(
+                s, q[sel], RangeSpec(spec.radius, max_neighbors=m_child),
+                metric,
+            )
+            part = self._scatter_range(res, sel, q_total, s)
+            if self_ids is not None:
+                part = self._strip_self_csr(part, self_ids)
+            parts.append(part)
+            visits += int(sel.size)
+        if not parts:
+            parts = [
+                RangeResult(
+                    offsets=np.zeros((q_total + 1,), np.int64),
+                    idxs=np.empty((0,), np.int32),
+                    dists=np.empty((0,), np.float32),
+                    radius=spec.radius,
+                    truncated=(
+                        np.zeros((q_total,), bool) if m is not None else None
+                    ),
+                )
+            ]
+        out = merge_range(
+            parts, radius=spec.radius, max_neighbors=m, metric=metric.name
+        )
+        return self._account(q_total, visits, t0, out)
+
+    # -- introspection -----------------------------------------------------
+
+    def stats(self) -> dict:
+        s = super().stats()
+        s.update(self._c)
+        potential = self._c["shard_visits"] + self._c["shard_visits_pruned"]
+        s.update(
+            n_shards=self.n_shards,
+            partition=self._part.method,
+            child_backend=self._child_backend,
+            shard_sizes=self._part.sizes.tolist(),
+            prune_rate=(
+                round(self._c["shard_visits_pruned"] / potential, 4)
+                if potential
+                else 0.0
+            ),
+            children=[c.stats() for c in self._children],
+        )
+        return s

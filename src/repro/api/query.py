@@ -30,6 +30,8 @@ PR-1 surface (``query(q, k=...)`` and the free-function shims).
 from __future__ import annotations
 
 import dataclasses
+import os
+import sys
 import warnings
 from typing import ClassVar, Optional
 
@@ -175,9 +177,45 @@ class HybridSpec(QuerySpec):
 
 _WARNED: set = set()
 
+#: root of the installed ``repro`` package; frames under it are library
+#: internals the warning must never be attributed to
+_PKG_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
-def warn_deprecated_once(key: str, message: str, *, stacklevel: int = 3) -> None:
-    """Emit ``DeprecationWarning`` for ``key`` at most once per process.
+
+def _caller_stacklevel() -> int:
+    """The ``warnings.warn`` stacklevel of the nearest frame *outside* the
+    ``repro`` package.
+
+    A fixed stacklevel is only right for one call depth: it pointed at the
+    caller when a shim invoked ``warn_deprecated_once`` directly, but the
+    moment a deprecated form is reached through another ``repro`` layer
+    (a server batch, a companion view, a future shim-over-shim) the
+    warning landed on library internals — useless to the one person it is
+    for, the migrating caller.  Walking the stack out of the package pins
+    it on their code at every depth.  (From ``warnings.warn``'s point of
+    view level 1 is our caller's frame, hence the offset.)
+    """
+    # sys._getframe(1) is warn_deprecated_once's own frame — exactly what
+    # warnings.warn (called from there) numbers as stacklevel 1, so the
+    # counter below shares warnings.warn's numbering.
+    level = 1
+    f = sys._getframe(1)
+    while f is not None and f.f_code.co_filename.startswith(
+        _PKG_ROOT + os.sep
+    ):
+        f = f.f_back
+        level += 1
+    return level
+
+
+def warn_deprecated_once(
+    key: str, message: str, *, stacklevel: Optional[int] = None
+) -> None:
+    """Emit ``DeprecationWarning`` for ``key`` at most once per process,
+    attributed to the caller *outside* this package (so ``python -W
+    error::DeprecationWarning`` and log lines point at the code that needs
+    migrating, not at the shim).  Pass ``stacklevel`` only to override the
+    automatic stack walk.
 
     Own registry (not ``warnings``' built-in "once") so the behavior is
     independent of whatever filters the host application or pytest
@@ -186,6 +224,8 @@ def warn_deprecated_once(key: str, message: str, *, stacklevel: int = 3) -> None
     if key in _WARNED:
         return
     _WARNED.add(key)
+    if stacklevel is None:
+        stacklevel = _caller_stacklevel()
     warnings.warn(message, DeprecationWarning, stacklevel=stacklevel)
 
 

@@ -8,39 +8,56 @@ the second half of the story — *how* queries are grouped into batches is a
 first-order performance knob, so grouping must live server-side where the
 whole queue is visible, not per call site.
 
-``NeighborServer`` fronts any ``NeighborIndex`` with:
+``NeighborServer`` is a *multi-tenant* front-end: a named registry of
+resident ``NeighborIndex`` instances behind one queue fabric.  Per tenant
+and request it provides:
 
-* **Tickets.**  ``submit(rows, spec, metric=...)`` enqueues a request and
-  returns a :class:`Ticket` future immediately; ``ticket.result()`` blocks
-  (driving the queue itself when no worker thread is running, so
-  single-threaded callers never deadlock), ``ticket.done()`` polls.
+* **Tickets.**  ``submit(rows, spec, metric=..., index=...)`` enqueues a
+  request against the named resident index and returns a :class:`Ticket`
+  future immediately; ``ticket.result()`` blocks (driving the queue itself
+  when no worker thread is running, so single-threaded callers never
+  deadlock), ``ticket.done()`` polls.
 * **Microbatching.**  Pending requests are coalesced into one padded batch
-  per (spec, metric) queue — only *identical* specs merge, so results are
-  exactly what ``index.query`` would return — and the padded row count is
-  rounded up to a power of two so the jitted programs underneath see a
-  handful of shapes, not one per arrival pattern.  The compile-shape
-  bucket is therefore (spec kind, k, metric, padded Q): many clients, one
-  program.
-* **Result cache.**  An LRU keyed on (spec, metric, quantized query
+  per (index, spec, metric) queue — only *identical* specs against the
+  same tenant merge, so results are exactly what ``index.query`` would
+  return — and the padded row count is rounded up to a power of two so the
+  jitted programs underneath see a handful of shapes, not one per arrival
+  pattern.  The compile-shape bucket is therefore (index, spec kind, k,
+  metric, padded Q): many clients, one program per tenant.
+* **Batch reordering.**  Inside each coalesced batch, queries are
+  Morton-sorted before padding and unsorted on completion
+  (``reorder="morton"``, the default; ``"none"`` disables) — RTNN's
+  observation that spatially coherent batches retire together, applied at
+  the one place that sees whole batches.  Row order never affects answers
+  (rows are independent), only locality; ``stats()`` counts
+  ``reordered_batches`` so the knob's engagement is observable.
+* **Admission control.**  ``max_queue=N`` bounds pending rows: a submit
+  that would exceed it fails *fast* — the ticket comes back already done
+  and ``result()`` raises :class:`AdmissionError` — instead of growing the
+  queue without bound (load shedding at the front door, not deep in the
+  stack).  ``stats()["rejected"]`` counts shed requests.
+* **Result cache.**  An LRU keyed on (index, spec, metric, quantized query
   coordinates) serves repeat queries without touching the index.  Keys
   quantize each coordinate to ``cache_quant`` (default 1e-6): queries
   closer than the quantum collide and share an answer — set
   ``cache_size=0`` if even that is too much approximation.
-* **Metering.**  Per (spec-kind, k, metric) bucket: request latency
+* **Metering.**  Per (index, spec-kind, k, metric) bucket: request latency
   p50/p99, throughput, batch-size histogram, cache hit rate, queue depth —
   all through ``server.stats()``.
 
 Synchronous use (tests, notebooks)::
 
-    server = NeighborServer(index)
+    server = NeighborServer(index)           # registered as "default"
     t1 = server.submit(q1, KnnSpec(8))
     t2 = server.submit(q2, KnnSpec(8))      # same bucket: coalesces with t1
     res = t1.result()                        # drives the queue inline
 
-Open-loop use (real serving)::
+Multi-tenant open-loop use (real serving)::
 
+    server = NeighborServer(indexes={"lidar": idx_a, "gps": idx_b},
+                            max_queue=50_000)
     server.start()                           # background worker thread
-    tickets = [server.submit(q, spec) for q in arrivals]
+    tickets = [server.submit(q, spec, index="lidar") for q in arrivals]
     outs = [t.result(timeout=30) for t in tickets]
     server.stop()
 
@@ -60,6 +77,7 @@ from typing import Optional
 import numpy as np
 
 from repro.core.grid import _next_pow2
+from repro.core.partition import morton_codes
 from repro.core.result import KNNResult, RangeResult
 
 from .query import QuerySpec
@@ -67,10 +85,17 @@ from .query import QuerySpec
 __all__ = [
     "NeighborServer",
     "Ticket",
+    "AdmissionError",
     "warm_default_radius",
     "dropped_counts",
     "poisson_open_loop",
 ]
+
+DEFAULT_INDEX = "default"
+
+
+class AdmissionError(RuntimeError):
+    """A submit was shed by admission control (``max_queue`` exceeded)."""
 
 
 # -- serving-loop helpers ----------------------------------------------------
@@ -121,7 +146,7 @@ def dropped_counts(dists) -> tuple:
 
 
 def poisson_open_loop(server, rows, spec, rate, rng, *, metric="l2",
-                      timeout=120.0):
+                      index=None, timeout=120.0):
     """Drive ``server`` with a Poisson open-loop arrival process: one
     request per row of ``rows``, exponential inter-arrival gaps at ``rate``
     requests/second, submitted regardless of completions (the regime where
@@ -129,7 +154,11 @@ def poisson_open_loop(server, rows, spec, rate, rng, *, metric="l2",
     every ticket, stops the worker.
 
     Returns ``(results, wall_seconds, latencies)`` with ``latencies`` the
-    per-request submit-to-done seconds.  Shared by ``launch/serve.py
+    per-request submit-to-done seconds.  Requests shed by admission
+    control (``max_queue``) are *expected* under overload — this is the
+    regime load shedding exists for — so they are dropped from
+    ``results`` rather than crashing the drive; the shed count is on
+    ``server.stats()["rejected"]``.  Shared by ``launch/serve.py
     --arrival open`` and ``benchmarks/bench_serve.py`` so both measure the
     same arrival process.
     """
@@ -143,8 +172,15 @@ def poisson_open_loop(server, rows, spec, rate, rng, *, metric="l2",
             delay = t0 + float(targets[i]) - time.perf_counter()
             if delay > 0:
                 time.sleep(delay)
-            tickets.append(server.submit(rows[i], spec, metric=metric))
-        results = [t.result(timeout=timeout) for t in tickets]
+            tickets.append(
+                server.submit(rows[i], spec, metric=metric, index=index)
+            )
+        results = []
+        for t in tickets:
+            try:
+                results.append(t.result(timeout=timeout))
+            except AdmissionError:
+                pass  # shed by load control; counted in stats()["rejected"]
         wall = time.perf_counter() - t0
     finally:
         # a timeout/failure must not leak the worker thread: a leaked
@@ -171,14 +207,15 @@ class Ticket:
     """
 
     __slots__ = (
-        "_server", "spec", "metric", "n_rows", "submitted_at",
+        "_server", "spec", "metric", "index_name", "n_rows", "submitted_at",
         "_event", "_result", "_error", "_rows_left", "_asm",
     )
 
-    def __init__(self, server, spec, metric, n_rows):
+    def __init__(self, server, spec, metric, n_rows, index_name=DEFAULT_INDEX):
         self._server = server
         self.spec = spec
         self.metric = metric
+        self.index_name = index_name
         self.n_rows = n_rows
         self.submitted_at = time.perf_counter()
         self._event = threading.Event()
@@ -230,7 +267,7 @@ class Ticket:
 
 
 class _Meter:
-    """Counters for one (spec-kind, k, metric) serving bucket.
+    """Counters for one (index, spec-kind, k, metric) serving bucket.
 
     All state is O(1) in served traffic: counts, a streaming batch-size
     histogram, and a bounded sliding window of recent request latencies
@@ -241,7 +278,8 @@ class _Meter:
     LATENCY_WINDOW = 4096
 
     __slots__ = ("requests", "rows", "batches", "batch_rows", "batch_hist",
-                 "latencies", "cache_hits", "cache_misses")
+                 "latencies", "cache_hits", "cache_misses", "rejected",
+                 "reordered_batches")
 
     def __init__(self):
         self.requests = 0
@@ -252,11 +290,15 @@ class _Meter:
         self.latencies: deque = deque(maxlen=self.LATENCY_WINDOW)
         self.cache_hits = 0
         self.cache_misses = 0
+        self.rejected = 0
+        self.reordered_batches = 0
 
-    def record_batch(self, n_rows: int) -> None:
+    def record_batch(self, n_rows: int, *, reordered: bool = False) -> None:
         self.batches += 1
         self.batch_rows += n_rows
         self.batch_hist[int(n_rows)] = self.batch_hist.get(int(n_rows), 0) + 1
+        if reordered:
+            self.reordered_batches += 1
 
     def summary(self, queue_depth: int) -> dict:
         lat = np.asarray(self.latencies, np.float64)
@@ -279,6 +321,8 @@ class _Meter:
             "cache_hit_rate": (
                 round(self.cache_hits / looked, 4) if looked else 0.0
             ),
+            "rejected": self.rejected,
+            "reordered_batches": self.reordered_batches,
             "queue_depth": queue_depth,
         }
 
@@ -287,11 +331,14 @@ class _Meter:
 
 
 class NeighborServer:
-    """Microbatching request front-end over one resident ``NeighborIndex``.
+    """Microbatching request front-end over named resident indexes.
 
     Args:
-      index: any built ``NeighborIndex`` (the server owns its hot path —
-        don't call ``index.query`` concurrently from elsewhere).
+      index: convenience single tenant, registered under the name
+        ``"default"`` (the server owns each tenant's hot path — don't call
+        ``index.query`` concurrently from elsewhere).
+      indexes: dict of name -> ``NeighborIndex`` tenants; combines with
+        ``index``.  More tenants can join later via :meth:`add_index`.
       max_batch: most query rows coalesced into one ``index.query`` call.
       cache_size: LRU capacity in cached *rows* (0 disables the cache).
       cache_quant: coordinate quantum of the cache key; queries closer
@@ -301,73 +348,203 @@ class NeighborServer:
         queries to the fronted index — they never appear in served
         results or the server's own meters, but the *index's* counters
         (``queries_served``, warm-start state) do include them; compare
-        server meters, not ``stats()["index"]``, when reconciling request
-        counts.  Set False to trade compile churn for exact index
+        server meters, not ``stats()["indexes"]``, when reconciling
+        request counts.  Set False to trade compile churn for exact index
         counters.
       max_wait_ms: how long the worker thread idles waiting for arrivals
         before re-checking (worker mode only; no artificial batching
         delay is ever added — a batch forms from whatever is pending).
+      max_queue: admission bound on *pending rows* across all tenants; a
+        submit that would exceed it comes back as an already-failed
+        ticket raising :class:`AdmissionError` (None = unbounded).
+      reorder: "morton" Z-order-sorts each coalesced batch's rows before
+        padding and unsorts on completion (RTNN batch scheduling; answers
+        are row-independent so results are unchanged); "none" disables.
     """
 
     def __init__(
         self,
-        index,
+        index=None,
         *,
+        indexes: Optional[dict] = None,
         max_batch: int = 512,
         cache_size: int = 4096,
         cache_quant: float = 1e-6,
         pad_pow2: bool = True,
         max_wait_ms: float = 2.0,
+        max_queue: Optional[int] = None,
+        reorder: str = "morton",
     ):
-        self.index = index
+        if reorder not in ("morton", "none"):
+            raise ValueError(
+                f"reorder must be 'morton' or 'none', got {reorder!r}"
+            )
+        self._indexes: "OrderedDict[str, object]" = OrderedDict()
+        if index is not None:
+            self._indexes[DEFAULT_INDEX] = index
+        for name, idx in (indexes or {}).items():
+            self._indexes[str(name)] = idx
+        if not self._indexes:
+            raise ValueError(
+                "NeighborServer needs at least one resident index "
+                "(positional `index` and/or the `indexes` dict)"
+            )
         self.max_batch = int(max_batch)
         self.cache_size = int(cache_size)
         self.cache_quant = float(cache_quant)
         self.pad_pow2 = bool(pad_pow2)
         self.max_wait_ms = float(max_wait_ms)
+        self.max_queue = None if max_queue is None else int(max_queue)
+        self.reorder = reorder
 
         self._lock = threading.RLock()
         self._serve_lock = threading.Lock()  # serializes index.query calls
         self._arrived = threading.Condition(self._lock)
-        # (spec, metric) -> deque of (ticket, local_row, row (d,))
+        # (index_name, spec, metric) -> deque of (ticket, local_row, row)
         self._queues: "OrderedDict[tuple, deque]" = OrderedDict()
-        self._meters: dict = {}  # (kind, k, metric) -> _Meter
+        self._meters: dict = {}  # (index_name, kind, k, metric) -> _Meter
         self._cache: "OrderedDict[tuple, tuple]" = OrderedDict()
         self._worker: Optional[threading.Thread] = None
         self._stop = False
         self._submitted = 0
         self._served = 0
+        self._rejected = 0
+        self._inflight: dict = {}  # index_name -> rows popped, not yet served
+
+    # -- tenant registry ---------------------------------------------------
+
+    @property
+    def index(self):
+        """The sole/default tenant (back-compat for single-index use).
+        Raises ``ValueError`` (never AttributeError, which ``hasattr`` /
+        ``getattr``-with-default would silently swallow) when several
+        named tenants make the bare handle ambiguous."""
+        return self._indexes[self._resolve_index(None)]
+
+    def indexes(self) -> list:
+        return sorted(self._indexes)
+
+    def add_index(self, name: str, index) -> None:
+        """Register a resident index under ``name`` (rejects live names —
+        swapping a tenant under in-flight tickets would serve them from
+        the wrong cloud)."""
+        name = str(name)
+        with self._lock:
+            if name in self._indexes:
+                raise ValueError(f"index {name!r} is already registered")
+            self._indexes[name] = index
+
+    def remove_index(self, name: str):
+        """Deregister and return tenant ``name``; refuses while requests
+        for it are pending — queued *or* popped into a batch the worker is
+        serving right now (yanking the index mid-batch would strand those
+        tickets)."""
+        name = str(name)
+        with self._lock:
+            if name not in self._indexes:
+                raise KeyError(name)
+            pending = sum(
+                len(q) for (iname, _, _), q in self._queues.items()
+                if iname == name
+            ) + self._inflight.get(name, 0)
+            if pending:
+                raise ValueError(
+                    f"index {name!r} has {pending} pending rows; drain first"
+                )
+            return self._indexes.pop(name)
+
+    def _resolve_index(self, name: Optional[str]) -> str:
+        if name is None:
+            if DEFAULT_INDEX in self._indexes:
+                return DEFAULT_INDEX
+            if len(self._indexes) == 1:
+                return next(iter(self._indexes))
+            raise ValueError(
+                f"server fronts several indexes ({sorted(self._indexes)}); "
+                "pass submit(..., index=name)"
+            )
+        name = str(name)
+        if name not in self._indexes:
+            raise KeyError(
+                f"unknown index {name!r}; registered: {sorted(self._indexes)}"
+            )
+        return name
 
     # -- public API --------------------------------------------------------
 
-    def submit(self, queries, spec: QuerySpec, *, metric: str = "l2") -> Ticket:
-        """Enqueue ``queries`` ((d,) or (Q, d)) under ``spec``; returns a
-        :class:`Ticket` immediately.  Rows already in the cache are served
-        on the spot; the rest wait for a batch."""
+    def submit(
+        self,
+        queries,
+        spec: QuerySpec,
+        *,
+        metric: str = "l2",
+        index: Optional[str] = None,
+    ) -> Ticket:
+        """Enqueue ``queries`` ((d,) or (Q, d)) under ``spec`` against the
+        named resident ``index`` (the default tenant when omitted);
+        returns a :class:`Ticket` immediately.  Rows already in the cache
+        are served on the spot; the rest wait for a batch.  When admission
+        control is on and the queue is full, the ticket comes back already
+        failed with :class:`AdmissionError`."""
         if not isinstance(spec, QuerySpec):
             raise TypeError(
                 f"spec must be a QuerySpec, got {type(spec).__name__}"
             )
         spec.validate()
+        name = self._resolve_index(index)
+        target = self._indexes[name]
         rows = np.asarray(queries, np.float32)
         if rows.ndim == 1:
             rows = rows[None, :]
-        if rows.ndim != 2 or rows.shape[1] != self.index.dim:
+        if rows.ndim != 2 or rows.shape[1] != target.dim:
             raise ValueError(
-                f"queries must be (Q, {self.index.dim}) or "
-                f"({self.index.dim},), got {rows.shape}"
+                f"queries must be (Q, {target.dim}) or "
+                f"({target.dim},) for index {name!r}, got {rows.shape}"
             )
         if rows.shape[0] == 0:
             raise ValueError("cannot submit an empty query batch")
-        ticket = Ticket(self, spec, metric, rows.shape[0])
-        meter = self._meter(spec, metric)
+        ticket = Ticket(self, spec, metric, rows.shape[0], index_name=name)
         with self._lock:
+            if name not in self._indexes:
+                # the tenant was remove_index'd between resolution and
+                # here; enqueuing now would strand the rows past the
+                # remover's no-pending guarantee (and a meter created
+                # before this check would leak a phantom bucket)
+                raise KeyError(
+                    f"unknown index {name!r}; registered: "
+                    f"{sorted(self._indexes)}"
+                )
+            meter = self._meter(name, spec, metric)
+            # cache first, admission second: only the rows that would
+            # actually *enqueue* count against max_queue, so a fully
+            # cached repeat query is never shed by a full queue (hot
+            # queries are the last traffic load shedding should drop)
+            hits = [
+                self._cache_get(name, spec, metric, rows[li])
+                for li in range(rows.shape[0])
+            ]
+            n_miss = sum(1 for h in hits if h is None)
+            # "pending" = queued + popped-but-unserved, same accounting
+            # remove_index uses — a slow in-flight batch must not open
+            # the admission gate to another max_batch of rows
+            pending = self._depth() + sum(self._inflight.values())
+            if (
+                self.max_queue is not None
+                and pending + n_miss > self.max_queue
+            ):
+                self._rejected += 1
+                meter.rejected += 1
+                ticket._error = AdmissionError(
+                    f"queue full: {pending} rows pending, "
+                    f"{n_miss} offered, max_queue={self.max_queue}"
+                )
+                ticket._event.set()
+                return ticket
             self._submitted += 1
             meter.requests += 1
             meter.rows += rows.shape[0]
-            queue = self._queues.setdefault((spec, metric), deque())
-            for li in range(rows.shape[0]):
-                hit = self._cache_get(spec, metric, rows[li])
+            queue = self._queues.setdefault((name, spec, metric), deque())
+            for li, hit in enumerate(hits):
                 if hit is not None:
                     meter.cache_hits += 1
                     ticket._asm["cache_hits"] += 1
@@ -381,22 +558,33 @@ class NeighborServer:
         return ticket
 
     def step(self) -> int:
-        """Serve one microbatch from the (spec, metric) queue whose head
-        request has waited longest (FIFO across buckets — no starvation).
-        Returns the number of query rows served (0 = nothing pending).
-        This is the whole serving engine; the worker thread just loops it.
+        """Serve one microbatch from the (index, spec, metric) queue whose
+        head request has waited longest (FIFO across buckets — no
+        starvation).  Returns the number of query rows served (0 = nothing
+        pending).  This is the whole serving engine; the worker thread
+        just loops it.
         """
         with self._lock:
             key, queue = self._pick_queue()
             if key is None:
                 return 0
-            spec, metric = key
+            name, spec, metric = key
             batch = []
             while queue and len(batch) < self.max_batch:
                 batch.append(queue.popleft())
             if not queue:
                 self._queues.pop(key, None)
-        return self._run_batch(spec, metric, batch)
+            # popped rows stay "pending" for remove_index until served
+            self._inflight[name] = self._inflight.get(name, 0) + len(batch)
+        try:
+            return self._run_batch(name, spec, metric, batch)
+        finally:
+            with self._lock:
+                left = self._inflight.get(name, 0) - len(batch)
+                if left > 0:
+                    self._inflight[name] = left
+                else:
+                    self._inflight.pop(name, None)
 
     def drain(self) -> int:
         """Serve until every pending row is answered; returns rows served."""
@@ -432,21 +620,30 @@ class NeighborServer:
             self.drain()
 
     def stats(self) -> dict:
-        """Serving counters: totals, cache, per-bucket latency/throughput
-        meters, and the fronted index's own ``stats()``."""
+        """Serving counters: totals, cache, per-(tenant, bucket)
+        latency/throughput meters, and every resident index's own
+        ``stats()`` under ``"indexes"``."""
         with self._lock:
             buckets = {
-                f"{kind}/k={k}/{metric}": m.summary(
-                    self._bucket_depth(kind, k, metric)
+                f"{name}/{kind}/k={k}/{metric}": m.summary(
+                    self._bucket_depth(name, kind, k, metric)
                 )
-                for (kind, k, metric), m in self._meters.items()
+                for (name, kind, k, metric), m in self._meters.items()
             }
             hits = sum(m.cache_hits for m in self._meters.values())
             misses = sum(m.cache_misses for m in self._meters.values())
             return {
                 "submitted": self._submitted,
                 "served": self._served,
-                "pending_rows": self._depth(),
+                "rejected": self._rejected,
+                "reordered_batches": sum(
+                    m.reordered_batches for m in self._meters.values()
+                ),
+                # same "pending" admission control and remove_index use:
+                # queued plus popped-but-unserved, so a rejection message
+                # always reconciles with these numbers
+                "pending_rows": self._depth() + sum(self._inflight.values()),
+                "inflight_rows": sum(self._inflight.values()),
                 "worker_running": self._worker_alive(),
                 "cache": {
                     "rows": len(self._cache),
@@ -459,24 +656,27 @@ class NeighborServer:
                     ),
                 },
                 "buckets": buckets,
-                "index": self.index.stats(),
+                "indexes": {
+                    name: idx.stats() for name, idx in self._indexes.items()
+                },
             }
 
     # -- internals ---------------------------------------------------------
 
-    def _meter(self, spec, metric) -> _Meter:
-        key = (spec.kind, getattr(spec, "k", None), metric)
+    def _meter(self, name, spec, metric) -> _Meter:
+        key = (name, spec.kind, getattr(spec, "k", None), metric)
         with self._lock:
             m = self._meters.get(key)
             if m is None:
                 m = self._meters[key] = _Meter()
             return m
 
-    def _bucket_depth(self, kind, k, metric) -> int:
+    def _bucket_depth(self, name, kind, k, metric) -> int:
         return sum(
             len(q)
-            for (sp, me), q in self._queues.items()
-            if sp.kind == kind and getattr(sp, "k", None) == k and me == metric
+            for (nm, sp, me), q in self._queues.items()
+            if nm == name and sp.kind == kind
+            and getattr(sp, "k", None) == k and me == metric
         )
 
     def _depth(self) -> int:
@@ -514,23 +714,23 @@ class NeighborServer:
 
     # cache ------------------------------------------------------------
 
-    def _cache_key(self, spec, metric, row) -> tuple:
+    def _cache_key(self, name, spec, metric, row) -> tuple:
         q = np.round(np.asarray(row, np.float64) / self.cache_quant)
-        return (spec, metric, q.astype(np.int64).tobytes())
+        return (name, spec, metric, q.astype(np.int64).tobytes())
 
-    def _cache_get(self, spec, metric, row):
+    def _cache_get(self, name, spec, metric, row):
         if self.cache_size <= 0:
             return None
-        key = self._cache_key(spec, metric, row)
+        key = self._cache_key(name, spec, metric, row)
         hit = self._cache.get(key)
         if hit is not None:
             self._cache.move_to_end(key)
         return hit
 
-    def _cache_put(self, spec, metric, row, payload) -> None:
+    def _cache_put(self, name, spec, metric, row, payload) -> None:
         if self.cache_size <= 0:
             return
-        key = self._cache_key(spec, metric, row)
+        key = self._cache_key(name, spec, metric, row)
         self._cache[key] = payload
         self._cache.move_to_end(key)
         while len(self._cache) > self.cache_size:
@@ -538,11 +738,23 @@ class NeighborServer:
 
     # batch execution --------------------------------------------------
 
-    def _run_batch(self, spec, metric, batch) -> int:
+    def _run_batch(self, name, spec, metric, batch) -> int:
         m = len(batch)
         if m == 0:
             return 0
+        index = self._indexes[name]
         rows = np.stack([row for (_, _, row) in batch])
+        # RTNN batch reordering: Z-order-sort the coalesced rows so
+        # spatially close queries sit together in the engine's tiles and
+        # radius rounds, then unsort on completion.  pos[bi] is where batch
+        # item bi's answer row landed; answers are row-independent, so
+        # served results are unchanged.
+        reordered = self.reorder == "morton" and m > 1
+        if reordered:
+            order = np.argsort(morton_codes(rows), kind="stable")
+            rows = rows[order]
+            pos = np.empty((m,), np.int64)
+            pos[order] = np.arange(m)
         m_pad = _next_pow2(m) if self.pad_pow2 else m
         if m_pad > m:
             # pad with copies of row 0: every backend treats them as real
@@ -551,7 +763,7 @@ class NeighborServer:
         t0 = time.perf_counter()
         try:
             with self._serve_lock:  # one index.query in flight at a time
-                res = self.index.query(rows, spec, metric=metric)
+                res = index.query(rows, spec, metric=metric)
         except BaseException as e:
             # fail every ticket in the batch rather than stranding waiters
             with self._lock:
@@ -567,19 +779,22 @@ class NeighborServer:
             for bi, (ticket, li, row) in enumerate(batch):
                 if ticket._event.is_set():
                     continue  # an earlier batch of this ticket failed
+                ri = int(pos[bi]) if reordered else bi
                 payload = (
-                    self._range_row(res, bi)
+                    self._range_row(res, ri)
                     if is_range
-                    else self._knn_row(res, bi)
+                    else self._knn_row(res, ri)
                 )
-                self._cache_put(spec, metric, row, payload)
+                self._cache_put(name, spec, metric, row, payload)
                 self._fill_row(ticket, li, payload)
                 # per-row share of the batch's work; float so the
                 # remainder isn't truncated away row by row
                 ticket._asm["n_tests"] += res.n_tests / m_pad
                 ticket._asm["batch_sizes"].append(m)
                 tickets.add(ticket)
-            self._meter(spec, metric).record_batch(m)
+            self._meter(name, spec, metric).record_batch(
+                m, reordered=reordered
+            )
             for ticket in tickets:
                 if ticket._rows_left == 0:
                     self._finalize(ticket, plan=plan, service=service)
@@ -614,7 +829,7 @@ class NeighborServer:
             return
         ticket._error = error
         self._served += 1
-        self._meter(ticket.spec, ticket.metric).latencies.append(
+        self._meter(ticket.index_name, ticket.spec, ticket.metric).latencies.append(
             time.perf_counter() - ticket.submitted_at
         )
         ticket._event.set()
@@ -625,7 +840,7 @@ class NeighborServer:
         except BaseException as e:  # surfaced at ticket.result()
             ticket._error = e
         self._served += 1
-        self._meter(ticket.spec, ticket.metric).latencies.append(
+        self._meter(ticket.index_name, ticket.spec, ticket.metric).latencies.append(
             time.perf_counter() - ticket.submitted_at
         )
         ticket._event.set()
@@ -665,7 +880,7 @@ class NeighborServer:
                 dists=dists,
                 radius=rows[0][4],
                 n_tests=int(round(ticket._asm["n_tests"])),
-                backend=self.index.backend_name,
+                backend=self._indexes[ticket.index_name].backend_name,
                 metric=ticket.metric,
                 truncated=truncated,
                 timings=timings,
@@ -681,7 +896,7 @@ class NeighborServer:
             dists=dists,
             idxs=idxs,
             n_tests=int(round(ticket._asm["n_tests"])),
-            backend=self.index.backend_name,
+            backend=self._indexes[ticket.index_name].backend_name,
             metric=ticket.metric,
             found=found,
             timings=timings,

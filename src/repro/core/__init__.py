@@ -19,7 +19,20 @@ from .brute import brute_knn, brute_knn_engine
 from .datasets import DATASETS, make_dataset
 from .fixed_radius import fixed_radius_knn, fixed_radius_round
 from .grid import Grid, build_grid
-from .result import KNNResult, RangeResult, RoundStats
+from .partition import (
+    Partition,
+    aabb_min_dists,
+    morton_codes,
+    partition_points,
+)
+from .result import (
+    KNNResult,
+    RangeResult,
+    RoundStats,
+    merge_knn,
+    merge_range,
+    topk_merge_rows,
+)
 from .sampling import (
     max_knn_distance,
     percentile_knn_distance,
@@ -36,8 +49,15 @@ __all__ = [
     "fixed_radius_round",
     "Grid",
     "build_grid",
+    "Partition",
+    "partition_points",
+    "morton_codes",
+    "aabb_min_dists",
     "KNNResult",
     "RangeResult",
+    "merge_knn",
+    "merge_range",
+    "topk_merge_rows",
     "max_knn_distance",
     "percentile_knn_distance",
     "sample_start_radius",

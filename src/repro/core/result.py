@@ -5,16 +5,32 @@ backends (see ``repro.api``) and by the deprecated free-function shims
 (``trueknn`` / ``fixed_radius_knn``), so call sites never branch on which
 engine produced an answer.  Lives in ``repro.core`` (dependency-free) so
 both the core engines and the API layer can import it without cycles.
+
+Since the ShardedIndex fabric, result *merging* is a first-class operation
+here too: :func:`merge_knn` folds per-shard ``KNNResult`` parts into one
+exact top-k answer (ties broken by ascending index, matching the engines'
+``lax.top_k`` order, so a sharded answer is bit-identical to the
+monolithic one), and :func:`merge_range` folds per-shard CSR
+``RangeResult`` parts keeping every row nearest-first and re-deriving the
+``truncated`` flags.  Both accumulate ``n_tests`` (and ``rounds`` for
+knn) so the paper's work metric survives the split.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Sequence
 
 import numpy as np
 
-__all__ = ["KNNResult", "RangeResult", "RoundStats"]
+__all__ = [
+    "KNNResult",
+    "RangeResult",
+    "RoundStats",
+    "merge_knn",
+    "merge_range",
+    "topk_merge_rows",
+]
 
 
 @dataclasses.dataclass
@@ -159,3 +175,130 @@ class RangeResult:
             dd[i, :m] = dst[:m]
             ii[i, :m] = idx[:m]
         return dd, ii
+
+
+# -- first-class result merging (the ShardedIndex fabric) -------------------
+
+
+def topk_merge_rows(dists_a, idxs_a, dists_b, idxs_b, k: int):
+    """Row-wise exact top-k merge of two candidate sets.
+
+    Inputs are (Q, ka) / (Q, kb) candidate lists (inf/sentinel padding
+    welcome); the output is the (Q, k) nearest of the union, sorted
+    ascending with ties broken by ascending index — the same order
+    ``lax.top_k`` produces in the monolithic engines, which is what makes
+    a sharded merge bit-identical to the single-index answer.
+    """
+    d = np.concatenate([np.asarray(dists_a), np.asarray(dists_b)], axis=1)
+    i = np.concatenate([np.asarray(idxs_a), np.asarray(idxs_b)], axis=1)
+    order = np.lexsort((i, d), axis=-1)[:, :k]
+    rows = np.arange(d.shape[0])[:, None]
+    return d[rows, order], i[rows, order]
+
+
+def merge_knn(
+    parts: Sequence["KNNResult"],
+    k: int,
+    *,
+    sentinel: int,
+    backend: str = "",
+    metric: str = "l2",
+    timings: Optional[dict] = None,
+) -> "KNNResult":
+    """Fold per-shard ``KNNResult`` parts into one exact (Q, k) answer.
+
+    Every part must cover the *same* queries (Q rows each, inf/sentinel
+    padding where a shard had nothing for a row) with globally-mapped
+    indices; ``sentinel`` is the padding index (the cloud's N).
+    ``n_tests`` is summed and ``rounds`` concatenates with re-sequenced
+    indices.  ``found`` is summed where every part carries it (None
+    otherwise) — only meaningful when the per-part counts genuinely
+    partition one global count (e.g. exact per-shard ball populations);
+    counts that are *capped* per part (a child's top-k cut) do not, and
+    callers should derive their own (the sharded backend reports the
+    returned-neighbor count instead).
+    """
+    assert parts, "merge_knn needs at least one part"
+    q_total = np.asarray(parts[0].dists).shape[0]
+    d = np.full((q_total, k), np.inf, np.float32)
+    i = np.full((q_total, k), sentinel, np.int32)
+    for p in parts:
+        d, i = topk_merge_rows(d, i, p.dists, p.idxs, k)
+    found = None
+    if all(p.found is not None for p in parts):
+        found = np.sum([np.asarray(p.found, np.int64) for p in parts], axis=0)
+    rounds = []
+    for p in parts:
+        for rs in p.rounds:
+            rounds.append(dataclasses.replace(rs, round_idx=len(rounds)))
+    return KNNResult(
+        dists=d.astype(np.float32),
+        idxs=i.astype(np.int32),
+        n_tests=int(sum(int(p.n_tests) for p in parts)),
+        backend=backend,
+        metric=metric,
+        found=found,
+        rounds=rounds,
+        timings=dict(timings or {}),
+    )
+
+
+def merge_range(
+    parts: Sequence["RangeResult"],
+    *,
+    radius: float,
+    max_neighbors: Optional[int] = None,
+    backend: str = "",
+    metric: str = "l2",
+    timings: Optional[dict] = None,
+) -> "RangeResult":
+    """Fold per-shard CSR ``RangeResult`` parts into one exact answer.
+
+    Parts cover the same Q queries (empty rows where a shard was pruned or
+    had no in-ball points) with globally-mapped indices.  Rows come back
+    nearest-first with ties broken by ascending index; ``max_neighbors``
+    re-truncates each merged row to the nearest m, and the merged
+    ``truncated`` flag is exact: a row is truncated iff any part already
+    was (its shard alone holds more than m) or the merged row overflows m.
+    """
+    assert parts, "merge_range needs at least one part"
+    q_total = parts[0].n_queries
+    rows = np.concatenate(
+        [np.repeat(np.arange(q_total), p.counts) for p in parts]
+    )
+    dists = np.concatenate([np.asarray(p.dists, np.float32) for p in parts])
+    idxs = np.concatenate([np.asarray(p.idxs, np.int32) for p in parts])
+    order = np.lexsort((idxs, dists, rows))
+    rows, dists, idxs = rows[order], dists[order], idxs[order]
+    counts = np.sum([p.counts for p in parts], axis=0, dtype=np.int64)
+    part_trunc = [
+        p.truncated
+        if p.truncated is not None
+        else np.zeros((q_total,), bool)
+        for p in parts
+    ]
+    any_trunc = np.logical_or.reduce(part_trunc)
+    truncated = None
+    if max_neighbors is not None:
+        offsets_full = np.zeros((q_total + 1,), np.int64)
+        np.cumsum(counts, out=offsets_full[1:])
+        rank = np.arange(len(rows)) - offsets_full[rows]
+        keep = rank < max_neighbors
+        dists, idxs, rows = dists[keep], idxs[keep], rows[keep]
+        truncated = any_trunc | (counts > max_neighbors)
+        counts = np.minimum(counts, max_neighbors)
+    elif any(p.truncated is not None for p in parts):
+        truncated = any_trunc
+    offsets = np.zeros((q_total + 1,), np.int64)
+    np.cumsum(counts, out=offsets[1:])
+    return RangeResult(
+        offsets=offsets,
+        idxs=idxs,
+        dists=dists,
+        radius=float(radius),
+        n_tests=int(sum(int(p.n_tests) for p in parts)),
+        backend=backend,
+        metric=metric,
+        truncated=truncated,
+        timings=dict(timings or {}),
+    )

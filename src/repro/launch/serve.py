@@ -10,6 +10,12 @@ or neighbor-search serving through the ``NeighborServer`` front-end.
     PYTHONPATH=src python -m repro.launch.serve --mode knn \
         --backend trueknn --spec hybrid --k 8 --arrival open --rate 500
 
+    # sharded fabric end to end: a spatially-partitioned composite index
+    # (N shards, radius-aware shard pruning) registered under a tenant
+    # name on the multi-tenant server
+    PYTHONPATH=src python -m repro.launch.serve --mode knn \
+        --backend sharded --shards 8 --index lidar --arrival open --rate 500
+
     # closed loop (the pre-server demo shape, kept for comparison): one
     # fixed-size batch in flight at a time
     PYTHONPATH=src python -m repro.launch.serve --mode knn \
@@ -84,23 +90,32 @@ def _describe(res):
 def _closed_loop(server, spec, args, pts, rng):
     """One batch in flight at a time (the pre-server demo loop, through the
     server so its cache/metering still apply)."""
+    from repro.api import AdmissionError
+
     lat = []
     for b in range(args.batches):
         qs = pts[rng.integers(0, args.n, args.batch_size)] + rng.normal(
             scale=0.5, size=(args.batch_size, pts.shape[1])
         ).astype(np.float32)
         t0 = time.perf_counter()
-        res = server.submit(qs, spec, metric=args.metric).result()
+        try:
+            res = server.submit(
+                qs, spec, metric=args.metric, index=args.index
+            ).result()
+        except AdmissionError as e:
+            print(f"batch {b}: shed by admission control ({e})")
+            continue
         dt = time.perf_counter() - t0
         lat.append(dt)
         print(
             f"batch {b}: {dt*1e3:.0f} ms "
             f"({dt/args.batch_size*1e6:.0f} us/query) {_describe(res)}"
         )
-    print(
-        f"p50 batch latency {np.median(lat)*1e3:.0f} ms "
-        f"(steady state {min(lat)*1e3:.0f} ms)"
-    )
+    if lat:
+        print(
+            f"p50 batch latency {np.median(lat)*1e3:.0f} ms "
+            f"(steady state {min(lat)*1e3:.0f} ms)"
+        )
 
 
 def _open_loop(server, spec, args, pts, rng):
@@ -114,18 +129,22 @@ def _open_loop(server, spec, args, pts, rng):
         scale=0.5, size=(n_req, pts.shape[1])
     ).astype(np.float32)
     results, wall, lat = poisson_open_loop(
-        server, qs, spec, args.rate, rng, metric=args.metric
+        server, qs, spec, args.rate, rng, metric=args.metric,
+        index=args.index,
     )
     partial = sum(dropped_counts_row(r) for r in results)
+    served = len(results)
     print(
-        f"open loop: {n_req} requests in {wall:.2f}s "
-        f"(offered {args.rate:.0f}/s, served {n_req/wall:.0f}/s)"
+        f"open loop: {served}/{n_req} requests served in {wall:.2f}s "
+        f"(offered {args.rate:.0f}/s, served {served/wall:.0f}/s, "
+        f"shed {n_req - served})"
     )
-    print(
-        f"request latency p50 {np.percentile(lat, 50)*1e3:.1f} ms "
-        f"p99 {np.percentile(lat, 99)*1e3:.1f} ms; "
-        f"dropped_partial={partial}"
-    )
+    if served:
+        print(
+            f"request latency p50 {np.percentile(lat, 50)*1e3:.1f} ms "
+            f"p99 {np.percentile(lat, 99)*1e3:.1f} ms; "
+            f"dropped_partial={partial}"
+        )
 
 
 def dropped_counts_row(res) -> int:
@@ -143,11 +162,15 @@ def _run_knn(args):
     pts = make_dataset(args.dataset, args.n, seed=0)
     rng = np.random.default_rng(1)
 
+    cfg = {}
+    if args.backend == "sharded":
+        cfg["n_shards"] = args.shards
     t0 = time.perf_counter()
-    index = build_index(pts, backend=args.backend)
+    index = build_index(pts, backend=args.backend, **cfg)
+    shards = f", {args.shards} shards" if args.backend == "sharded" else ""
     print(
         f"dataset resident: {args.n} {args.dataset} points "
-        f"(backend={args.backend}), built in "
+        f"(backend={args.backend}{shards}, index={args.index!r}), built in "
         f"{(time.perf_counter()-t0)*1e3:.0f} ms"
     )
     # warm batch: pays sampling/grid builds/jit, and sizes the default radius
@@ -157,11 +180,15 @@ def _run_knn(args):
     )
     spec = _make_spec(args, warm.dists, index)
     server = NeighborServer(
-        index, max_batch=args.batch_size, cache_size=args.cache_size
+        indexes={args.index: index},
+        max_batch=args.batch_size,
+        cache_size=args.cache_size,
+        max_queue=args.max_queue,
     )
     print(
         f"serving ({args.arrival} loop): {spec} metric={args.metric} "
-        f"max_batch={args.batch_size} cache={args.cache_size}"
+        f"max_batch={args.batch_size} cache={args.cache_size} "
+        f"max_queue={args.max_queue}"
     )
 
     if args.arrival == "closed":
@@ -176,9 +203,21 @@ def _run_knn(args):
             f"(mean {b['mean_batch_rows']} rows/batch, hist "
             f"{b['batch_size_hist']}), p50 {b['latency_p50_ms']} ms "
             f"p99 {b['latency_p99_ms']} ms, cache_hit_rate "
-            f"{b['cache_hit_rate']}"
+            f"{b['cache_hit_rate']}, reordered {b['reordered_batches']}"
         )
-    print(f"index stats: {s['index']}")
+    if s["rejected"]:
+        print(f"admission control shed {s['rejected']} requests")
+    for name, st in s["indexes"].items():
+        if st.get("backend") == "sharded":
+            print(
+                f"index {name!r}: {st['n_shards']} shards "
+                f"(sizes {st['shard_sizes']}), prune_rate "
+                f"{st['prune_rate']} ({st['shard_visits_pruned']} of "
+                f"{st['shard_visits'] + st['shard_visits_pruned']} visits "
+                "skipped)"
+            )
+        else:
+            print(f"index {name!r} stats: {st}")
 
 
 def main():
@@ -193,6 +232,12 @@ def main():
     ap.add_argument("--dataset", default="kitti")
     ap.add_argument("--n", type=int, default=50_000)
     ap.add_argument("--backend", default="trueknn")
+    ap.add_argument("--shards", type=int, default=8,
+                    help="partition arity for --backend sharded")
+    ap.add_argument("--index", default="default",
+                    help="tenant name the resident index serves under")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="admission bound on pending rows (None = unbounded)")
     ap.add_argument("--spec", choices=["knn", "range", "hybrid"], default="knn")
     ap.add_argument("--k", type=int, default=8)
     ap.add_argument("--radius", type=float, default=None)

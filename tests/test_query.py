@@ -493,6 +493,43 @@ def test_free_function_shims_warn_once_and_match_spec_path():
         fixed_radius_knn(pts, r, 3, queries=qs)
 
 
+def test_deprecation_warnings_point_at_the_caller_not_the_shim():
+    """The warning's recorded location must be the *migrating caller's*
+    frame — this file — for every deprecated entry point, even when the
+    deprecated form is reached through another frame inside the repro
+    package (the fixed stacklevel used to pin such calls on library
+    internals)."""
+    import repro.api.query as query_mod
+    from repro.core import trueknn
+
+    pts, qs = _cloud()
+    index = build_index(pts, backend="brute")
+
+    def _warning_file(fn, *args, **kwargs):
+        _reset_deprecation_registry()
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            fn(*args, **kwargs)
+        dep = [x for x in w if issubclass(x.category, DeprecationWarning)]
+        assert dep, "no DeprecationWarning fired"
+        return dep[0].filename
+
+    assert _warning_file(index.query, qs, 3) == __file__
+    assert _warning_file(trueknn, pts, 3, queries=qs) == __file__
+
+    # a wrapper whose code object lives inside the package: the stack walk
+    # must skip past it to this file (a fixed stacklevel stops on it)
+    code = compile(
+        "def _pkg_wrapper(fn, *a, **k):\n    return fn(*a, **k)\n",
+        query_mod.__file__,
+        "exec",
+    )
+    ns: dict = {}
+    exec(code, ns)
+    assert _warning_file(ns["_pkg_wrapper"], index.query, qs, 3) == __file__
+    _reset_deprecation_registry()
+
+
 # ------------------------------------------------------- planner errors
 
 

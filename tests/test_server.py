@@ -26,6 +26,7 @@ import numpy as np
 import pytest
 
 from repro.api import (
+    AdmissionError,
     HybridSpec,
     KnnSpec,
     NeighborServer,
@@ -128,7 +129,7 @@ def test_server_coalesces_pending_requests_into_one_batch():
     # all six pending rows were coalesced into ONE padded batch
     assert res.timings["server_batch_rows"] == 6
     assert all(t.done() for t in tickets)
-    bucket = server.stats()["buckets"]["knn/k=3/l2"]
+    bucket = server.stats()["buckets"]["default/knn/k=3/l2"]
     assert bucket["batches"] == 1
     assert bucket["batch_size_hist"] == {6: 1}
     assert bucket["mean_batch_rows"] >= 2  # the acceptance bar
@@ -142,8 +143,8 @@ def test_server_batches_only_merge_identical_specs():
     assert a.result().dists.shape == (4, 3)
     assert b.result().dists.shape == (4, 4)
     buckets = server.stats()["buckets"]
-    assert buckets["knn/k=3/l2"]["batches"] == 1
-    assert buckets["knn/k=4/l2"]["batches"] == 1
+    assert buckets["default/knn/k=3/l2"]["batches"] == 1
+    assert buckets["default/knn/k=4/l2"]["batches"] == 1
 
 
 def test_step_serves_oldest_head_first_no_starvation():
@@ -167,7 +168,7 @@ def test_server_max_batch_splits_oversized_queues():
     t = server.submit(QS, KnnSpec(3))  # 48 rows > max_batch
     res = t.result()
     assert res.dists.shape == (48, 3)
-    bucket = server.stats()["buckets"]["knn/k=3/l2"]
+    bucket = server.stats()["buckets"]["default/knn/k=3/l2"]
     assert bucket["batches"] == 3
     assert all(size <= 16 for size in bucket["batch_size_hist"])
 
@@ -268,7 +269,7 @@ def test_server_stats_reconcile_with_submissions():
     assert sum(b["requests"] for b in s["buckets"].values()) == len(reqs)
     assert sum(b["rows"] for b in s["buckets"].values()) == served_rows
     assert s["cache"]["misses"] == served_rows
-    knn_l2 = s["buckets"]["knn/k=4/l2"]
+    knn_l2 = s["buckets"]["default/knn/k=4/l2"]
     assert knn_l2["requests"] == 2 and knn_l2["rows"] == 25
     assert knn_l2["latency_p50_ms"] is not None
     assert knn_l2["latency_p99_ms"] >= knn_l2["latency_p50_ms"]
@@ -403,3 +404,219 @@ print("SHAPE", dict(mesh.shape), "WARNED", len(hit) == 1)
     )
     assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
     assert "SHAPE {'model': 4} WARNED True" in out.stdout
+
+
+# ------------------------------ multi-tenancy, reordering, admission
+
+
+def test_server_multi_tenant_routes_by_index_name():
+    pts_b = make_dataset("kitti", 700, seed=8)  # different dim than PTS
+    qs_b = make_dataset("kitti", 24, seed=15)
+    ia = build_index(PTS, backend="brute")
+    ib = build_index(pts_b, backend="brute")
+    server = NeighborServer(indexes={"gps": ia, "lidar": ib}, cache_size=0)
+    ta = server.submit(QS, KnnSpec(4), index="gps")
+    tb = server.submit(qs_b, KnnSpec(4), index="lidar")
+    assert np.array_equal(ta.result().dists, ia.query(QS, KnnSpec(4)).dists)
+    assert np.array_equal(
+        tb.result().dists, ib.query(qs_b, KnnSpec(4)).dists
+    )
+    s = server.stats()
+    assert set(s["buckets"]) == {"gps/knn/k=4/l2", "lidar/knn/k=4/l2"}
+    assert set(s["indexes"]) == {"gps", "lidar"}
+    # rows are validated against the *named* tenant's dimensionality
+    with pytest.raises(ValueError, match="for index 'lidar'"):
+        server.submit(QS, KnnSpec(3), index="lidar")
+    with pytest.raises(KeyError, match="unknown index"):
+        server.submit(QS, KnnSpec(3), index="nope")
+    # several tenants and no name: ambiguous
+    with pytest.raises(ValueError, match="pass submit"):
+        server.submit(QS, KnnSpec(3))
+    # a sole non-default tenant resolves without a name
+    solo = NeighborServer(indexes={"only": ia}, cache_size=0)
+    assert solo.submit(QS, KnnSpec(3)).result().dists.shape == (48, 3)
+
+
+def test_server_add_remove_index_lifecycle():
+    ia = build_index(PTS, backend="brute")
+    server = NeighborServer(ia, cache_size=0)
+    server.add_index("extra", build_index(PTS, backend="brute"))
+    with pytest.raises(ValueError, match="already registered"):
+        server.add_index("extra", ia)
+    t = server.submit(QS[:4], KnnSpec(3), index="extra")
+    with pytest.raises(ValueError, match="pending"):
+        server.remove_index("extra")  # in-flight rows: refuse
+    t.result()
+    server.remove_index("extra")
+    with pytest.raises(KeyError):
+        server.remove_index("extra")
+    # default tenant still serves and the back-compat handle points at it
+    assert server.index is ia
+    assert server.submit(QS[:2], KnnSpec(2)).result().dists.shape == (2, 2)
+
+
+def test_server_tenants_do_not_share_cache_entries():
+    ia = build_index(PTS, backend="brute")
+    ib = build_index(PTS, backend="brute")  # same cloud, different tenant
+    server = NeighborServer(indexes={"a": ia, "b": ib})
+    first = server.submit(QS[:4], KnnSpec(3), index="a")
+    first.result()
+    hit = server.submit(QS[:4], KnnSpec(3), index="a")
+    assert hit.result().timings["plan"] == "cache"
+    miss = server.submit(QS[:4], KnnSpec(3), index="b")
+    assert miss.result().timings["plan"] != "cache"
+
+
+def test_server_morton_reorder_preserves_results_and_counts():
+    index = build_index(PTS, backend="brute")
+    direct = index.query(QS, KnnSpec(5))
+    # adversarial submission order: interleave far-apart rows
+    perm = np.argsort(np.tile([0, 1], len(QS) // 2 + 1)[: len(QS)],
+                      kind="stable")
+    scrambled = QS[perm]
+    server = NeighborServer(build_index(PTS, backend="brute"), cache_size=0)
+    res = server.submit(scrambled, KnnSpec(5)).result()
+    # unsort restores request row order exactly
+    assert np.array_equal(res.dists, direct.dists[perm])
+    assert np.array_equal(res.idxs, direct.idxs[perm])
+    s = server.stats()
+    assert s["reordered_batches"] == 1  # the satellite's proof-of-engagement
+    assert s["buckets"]["default/knn/k=5/l2"]["reordered_batches"] == 1
+    # reorder="none" serves identically but never reorders
+    off = NeighborServer(build_index(PTS, backend="brute"),
+                         cache_size=0, reorder="none")
+    res2 = off.submit(scrambled, KnnSpec(5)).result()
+    assert np.array_equal(res2.dists, res.dists)
+    assert off.stats()["reordered_batches"] == 0
+    with pytest.raises(ValueError, match="reorder"):
+        NeighborServer(index, reorder="hilbert")
+
+
+def test_server_admission_control_rejects_past_max_queue():
+    server = NeighborServer(
+        build_index(PTS, backend="brute"), cache_size=0, max_queue=10
+    )
+    ok = server.submit(QS[:8], KnnSpec(3))
+    shed = server.submit(QS[:8], KnnSpec(3))  # 8 pending + 8 > 10
+    assert shed.done()  # fast-failing ticket: no waiting, no queueing
+    with pytest.raises(AdmissionError, match="queue full"):
+        shed.result()
+    s = server.stats()
+    assert s["rejected"] == 1
+    assert s["buckets"]["default/knn/k=3/l2"]["rejected"] == 1
+    # shed requests never entered the queue or the request meters
+    assert s["pending_rows"] == 8
+    assert s["buckets"]["default/knn/k=3/l2"]["requests"] == 1
+    assert np.array_equal(
+        ok.result().dists,
+        build_index(PTS, backend="brute").query(QS[:8], KnnSpec(3)).dists,
+    )
+    # queue drained: admissions resume
+    assert server.submit(QS[:8], KnnSpec(3)).result().dists.shape == (8, 3)
+    assert server.stats()["rejected"] == 1
+
+
+def test_admission_control_serves_cached_rows_when_queue_full():
+    """The cache is consulted before admission: a fully cached repeat
+    query is served even when the queue is at its bound — only rows that
+    would actually enqueue count against max_queue."""
+    server = NeighborServer(
+        build_index(PTS, backend="brute"), max_queue=8, cache_size=1024
+    )
+    primed = server.submit(QS[:4], KnnSpec(3))
+    primed.result()  # queue drained, answers cached
+    blocker = server.submit(QS[8:16], KnnSpec(3))  # fills the queue: 8 of 8
+    cached = server.submit(QS[:4], KnnSpec(3))  # 0 uncached rows: admitted
+    assert cached.done()
+    res = cached.result()
+    assert res.timings["plan"] == "cache"
+    assert np.array_equal(res.dists, primed.result().dists)
+    shed = server.submit(QS[16:20], KnnSpec(3))  # uncached rows: shed
+    with pytest.raises(AdmissionError, match="queue full"):
+        shed.result()
+    assert server.stats()["rejected"] == 1
+    blocker.result()
+
+
+def test_remove_index_refuses_while_batch_is_in_flight():
+    """Rows popped into a batch the server is executing still count as
+    pending: remove_index must refuse mid-batch, not yank the tenant out
+    from under its own query call."""
+    idx = build_index(PTS, backend="brute")
+    server = NeighborServer(indexes={"x": idx}, cache_size=0)
+    orig = idx.query
+    seen = {}
+
+    def query_and_try_remove(q, spec=None, **kw):
+        with pytest.raises(ValueError, match="pending"):
+            server.remove_index("x")
+        seen["guarded"] = True
+        return orig(q, spec, **kw)
+
+    idx.query = query_and_try_remove
+    res = server.submit(QS[:4], KnnSpec(3), index="x").result()
+    assert seen["guarded"] and res.dists.shape == (4, 3)
+    server.remove_index("x")  # drained: removal succeeds
+
+
+def test_admission_control_counts_in_flight_rows_as_pending():
+    """A popped batch still executing counts against max_queue — the same
+    pending accounting remove_index uses — so a slow batch can't open the
+    gate to another max_batch of rows."""
+    idx = build_index(PTS, backend="brute")
+    server = NeighborServer(idx, cache_size=0, max_queue=8)
+    orig = idx.query
+    seen = {}
+
+    def query_and_probe(q, spec=None, **kw):
+        # mid-batch: 8 rows in flight, queue empty — a 4-row submit must
+        # still be shed (8 + 4 > 8)
+        shed = server.submit(QS[8:12], KnnSpec(3))
+        assert shed.done()
+        with pytest.raises(AdmissionError, match="8 rows pending"):
+            shed.result()
+        seen["probed"] = True
+        return orig(q, spec, **kw)
+
+    idx.query = query_and_probe
+    ok = server.submit(QS[:8], KnnSpec(3))
+    res = ok.result()
+    idx.query = orig
+    assert seen["probed"] and res.dists.shape == (8, 3)
+    assert server.stats()["rejected"] == 1
+    # batch done: admissions resume
+    assert server.submit(QS[:4], KnnSpec(3)).result().dists.shape == (4, 3)
+
+
+def test_multi_tenant_index_property_is_loud_not_attributeerror():
+    """hasattr/getattr-with-default must not swallow the ambiguity error."""
+    server = NeighborServer(
+        indexes={
+            "a": build_index(PTS, backend="brute"),
+            "b": build_index(PTS, backend="brute"),
+        }
+    )
+    with pytest.raises(ValueError, match="several indexes"):
+        server.index
+    # even hasattr/getattr-with-default stay loud (they swallow only
+    # AttributeError, which the property deliberately never raises)
+    with pytest.raises(ValueError, match="several indexes"):
+        hasattr(server, "index")
+
+
+def test_poisson_open_loop_survives_shed_requests():
+    """Under the overload max_queue exists for, the shared open-loop
+    driver reports served results and drops shed tickets instead of
+    crashing on the first AdmissionError."""
+    from repro.api.server import poisson_open_loop
+
+    server = NeighborServer(
+        build_index(PTS, backend="brute"), cache_size=0, max_queue=0
+    )
+    rng = np.random.default_rng(0)
+    results, wall, lat = poisson_open_loop(
+        server, QS[:8], KnnSpec(3), rate=1e6, rng=rng
+    )
+    assert results == [] and lat.size == 0  # every request was shed
+    assert server.stats()["rejected"] == 8
+    assert not server.stats()["worker_running"]  # worker stopped cleanly

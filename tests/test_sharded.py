@@ -1,0 +1,385 @@
+"""Tests for the ShardedIndex fabric: the spatial partitioner, the
+first-class result merges, the composite backend's exact-identity
+contract (sharded == monolithic, bit for bit, across specs and metrics),
+radius-aware shard pruning, and the planner fallback for stop_radius.
+"""
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    HybridSpec,
+    KnnSpec,
+    RangeSpec,
+    build_index,
+)
+from repro.core import (
+    KNNResult,
+    RangeResult,
+    aabb_min_dists,
+    make_dataset,
+    merge_knn,
+    merge_range,
+    morton_codes,
+    partition_points,
+    topk_merge_rows,
+)
+
+PTS = make_dataset("porto", 900, seed=2)
+# in-cluster queries plus far-out ones, so radius specs produce a mix of
+# full, partial and empty rows (the ragged cases the merge must preserve)
+QS = np.concatenate(
+    [
+        make_dataset("porto", 36, seed=9),
+        np.float32([[40.0, 40.0], [-35.0, 20.0]]),
+    ]
+)
+METRICS = ["l2", "l1", "linf", "cosine"]
+
+
+# ----------------------------------------------------------- partitioner
+
+
+def test_partition_covers_cloud_with_coherent_nonempty_shards():
+    for method in ("morton", "grid"):
+        part = partition_points(PTS, 8, method=method)
+        assert part.method == method
+        assert int(part.sizes.sum()) == len(PTS)
+        assert all(s > 0 for s in part.sizes)
+        seen = np.concatenate(part.shards)
+        assert np.array_equal(np.sort(seen), np.arange(len(PTS)))
+        for s, idx in enumerate(part.shards):
+            # global order survives the split (tie-breaking depends on it)
+            assert np.all(np.diff(idx) > 0)
+            assert np.all(part.assign[idx] == s)
+            # the AABB is exactly the member points' box
+            assert np.array_equal(part.aabbs[s, 0], PTS[idx].min(0))
+            assert np.array_equal(part.aabbs[s, 1], PTS[idx].max(0))
+
+
+def test_partition_morton_is_balanced_and_clamps_to_n():
+    part = partition_points(PTS, 7)
+    assert part.n_shards == 7
+    assert part.sizes.max() - part.sizes.min() <= 1
+    tiny = partition_points(PTS[:3], 8)
+    assert tiny.n_shards == 3  # never more shards than points
+    with pytest.raises(ValueError, match="morton.*grid|unknown partition"):
+        partition_points(PTS, 4, method="voronoi")
+
+
+def test_morton_codes_are_deterministic_and_local():
+    c1 = morton_codes(PTS)
+    c2 = morton_codes(PTS)
+    assert c1.dtype == np.uint64 and np.array_equal(c1, c2)
+    # locality: consecutive points along the curve are far closer than
+    # random pairs on average
+    order = np.argsort(c1, kind="stable")
+    sorted_pts = PTS[order].astype(np.float64)
+    adjacent = np.linalg.norm(np.diff(sorted_pts, axis=0), axis=1).mean()
+    rng = np.random.default_rng(0)
+    shuffled = sorted_pts[rng.permutation(len(sorted_pts))]
+    random_adjacent = np.linalg.norm(np.diff(shuffled, axis=0), axis=1).mean()
+    assert adjacent < 0.25 * random_adjacent
+
+
+def test_morton_codes_stay_meaningful_in_high_dimensions():
+    """uint64 shifts past bit 63 wrap to zero; the interleave must cap the
+    participating axes instead of silently destroying the code."""
+    rng = np.random.default_rng(3)
+    for d in (64, 80, 768):
+        x = rng.normal(size=(100, d)).astype(np.float32)
+        codes = morton_codes(x)
+        # distinct random rows must keep (near-)distinct codes
+        assert len(np.unique(codes)) >= 95, (d, len(np.unique(codes)))
+        # identical rows still collide
+        assert morton_codes(np.vstack([x[:1], x[:1]]))[0] == morton_codes(
+            np.vstack([x[:1], x[:1]])
+        )[1]
+
+
+def test_aabb_min_dists_are_true_lower_bounds():
+    part = partition_points(PTS, 6)
+    for metric in ("l2", "l1", "linf"):
+        bounds = aabb_min_dists(part.aabbs, QS, metric)
+        assert bounds.shape == (len(QS), 6) and (bounds >= 0).all()
+        diff = np.abs(
+            QS.astype(np.float64)[:, None, :] - PTS.astype(np.float64)[None]
+        )
+        true = {
+            "l2": np.sqrt((diff**2).sum(-1)),
+            "l1": diff.sum(-1),
+            "linf": diff.max(-1),
+        }[metric]
+        for s, idx in enumerate(part.shards):
+            assert (true[:, idx].min(1) >= bounds[:, s] - 1e-9).all(), (
+                metric, s,
+            )
+    with pytest.raises(ValueError, match="no AABB bound"):
+        aabb_min_dists(part.aabbs, QS, "cosine")
+
+
+# ---------------------------------------------------------------- merges
+
+
+def test_topk_merge_rows_orders_by_distance_then_index():
+    d1 = np.float32([[0.5, np.inf], [1.0, 2.0]])
+    i1 = np.int32([[3, 9], [7, 2]])
+    d2 = np.float32([[0.5, 0.1], [np.inf, np.inf]])
+    i2 = np.int32([[1, 4], [9, 9]])
+    d, i = topk_merge_rows(d1, i1, d2, i2, 3)
+    assert np.array_equal(d, np.float32([[0.1, 0.5, 0.5], [1.0, 2.0, np.inf]]))
+    # the 0.5 tie breaks by ascending index: 1 before 3
+    assert np.array_equal(i, np.int32([[4, 1, 3], [7, 2, 9]]))
+
+
+def test_merge_knn_accumulates_tests_found_and_rounds():
+    from repro.core.result import RoundStats
+
+    mk = lambda d, i, found, tests, rounds: KNNResult(
+        dists=np.float32(d), idxs=np.int32(i), n_tests=tests,
+        found=np.int64(found), rounds=rounds,
+    )
+    rs = RoundStats(0, 1.0, 2, 2, 5, (), 0, 0.0)
+    a = mk([[0.2, np.inf]], [[1, 9]], [1], 10, [rs])
+    b = mk([[0.3, 0.4]], [[5, 6]], [2], 7, [rs, rs])
+    out = merge_knn([a, b], 2, sentinel=9)
+    assert np.array_equal(out.dists, np.float32([[0.2, 0.3]]))
+    assert np.array_equal(out.idxs, np.int32([[1, 5]]))
+    assert out.n_tests == 17
+    assert np.array_equal(out.found, [3])
+    assert [r.round_idx for r in out.rounds] == [0, 1, 2]
+    # any part without found -> merged found is None
+    c = mk([[0.9, np.inf]], [[2, 9]], [0], 0, [])
+    c.found = None
+    assert merge_knn([a, c], 2, sentinel=9).found is None
+
+
+def test_merge_range_keeps_nearest_first_and_exact_truncation():
+    def csr(rows, truncated=None):
+        counts = [len(r) for r in rows]
+        offsets = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+        flat = [x for r in rows for x in r]
+        return RangeResult(
+            offsets=offsets,
+            idxs=np.int32([i for i, _ in flat]),
+            dists=np.float32([d for _, d in flat]),
+            radius=1.0,
+            truncated=None if truncated is None else np.asarray(truncated),
+        )
+
+    a = csr([[(3, 0.1), (7, 0.5)], []], truncated=[False, False])
+    b = csr([[(1, 0.5)], [(2, 0.3), (4, 0.6)]], truncated=[True, False])
+    out = merge_range([a, b], radius=1.0, max_neighbors=2)
+    assert np.array_equal(out.offsets, [0, 2, 4])
+    assert np.array_equal(out.dists, np.float32([0.1, 0.5, 0.3, 0.6]))
+    # 0.5 tie: index 1 (part b) sorts before index 7 (part a)
+    assert np.array_equal(out.idxs, np.int32([3, 1, 2, 4]))
+    # row 0: a shard alone was truncated -> True even though the merged
+    # row fits; row 1: fits and no part truncated -> False
+    assert np.array_equal(out.truncated, [True, False])
+    # overflow without any part truncating still flags
+    out2 = merge_range([a, b], radius=1.0, max_neighbors=1)
+    assert np.array_equal(out2.truncated, [True, True])
+    assert np.array_equal(out2.dists, np.float32([0.1, 0.3]))
+    # no cap requested by the spec -> flags passed through
+    out3 = merge_range([a, b], radius=1.0)
+    assert np.array_equal(out3.truncated, [True, False])
+    assert np.array_equal(out3.counts, [3, 2])
+
+
+# ---------------------------------- exact identity vs the monolithic oracle
+
+
+def _pick_radius(metric, pct=55.0):
+    from repro.api import get_metric
+
+    D = get_metric(metric).pairwise(QS, PTS)
+    return float(np.percentile(np.sort(D, 1)[:, 4], pct))
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_sharded_equals_monolithic_brute_oracle(metric):
+    """The acceptance property: sharded kNN / hybrid / range answers are
+    *exactly* equal to the monolithic brute oracle — including ragged and
+    unfilled rows and the truncation flags."""
+    k = 5
+    r = _pick_radius(metric)
+    mono = build_index(PTS, backend="brute")
+    shard = build_index(
+        PTS, backend="sharded", n_shards=7, child_backend="brute"
+    )
+    # knn
+    a = mono.query(QS, KnnSpec(k), metric=metric)
+    b = shard.query(QS, KnnSpec(k), metric=metric)
+    assert np.array_equal(a.dists, b.dists)
+    assert np.array_equal(a.idxs, b.idxs)
+    # hybrid: the far-out queries leave unfilled (inf/sentinel) rows
+    a = mono.query(QS, HybridSpec(k, r), metric=metric)
+    b = shard.query(QS, HybridSpec(k, r), metric=metric)
+    assert np.isinf(b.dists).any() and np.isfinite(b.dists).any()
+    assert np.array_equal(a.dists, b.dists)
+    assert np.array_equal(a.idxs, b.idxs)
+    # found too: both report the returned in-ball count, min(k, ball)
+    assert np.array_equal(a.found, b.found)
+    # range with a row cap: ragged rows, some empty, some truncated
+    a = mono.query(QS, RangeSpec(r, max_neighbors=3), metric=metric)
+    b = shard.query(QS, RangeSpec(r, max_neighbors=3), metric=metric)
+    assert (b.counts == 0).any() and (b.counts > 0).any()
+    assert b.truncated.any() and not b.truncated.all()
+    assert np.array_equal(a.offsets, b.offsets)
+    assert np.array_equal(a.dists, b.dists)
+    assert np.array_equal(a.idxs, b.idxs)
+    assert np.array_equal(a.truncated, b.truncated)
+    # uncapped range too (truncated is None on both)
+    a = mono.query(QS, RangeSpec(r), metric=metric)
+    b = shard.query(QS, RangeSpec(r), metric=metric)
+    assert a.truncated is None and b.truncated is None
+    assert np.array_equal(a.offsets, b.offsets)
+    assert np.array_equal(a.dists, b.dists)
+    assert np.array_equal(a.idxs, b.idxs)
+
+
+@pytest.mark.parametrize("partition", ["morton", "grid"])
+def test_sharded_trueknn_children_match_monolithic_trueknn(partition):
+    k, r = 6, _pick_radius("l2")
+    mono = build_index(PTS, backend="trueknn")
+    shard = build_index(
+        PTS, backend="sharded", n_shards=5, child_backend="trueknn",
+        partition=partition,
+    )
+    for spec in (KnnSpec(k), HybridSpec(k, r), RangeSpec(r, max_neighbors=4)):
+        a = mono.query(QS, spec)
+        b = shard.query(QS, spec)
+        if isinstance(a, RangeResult):
+            assert np.array_equal(a.offsets, b.offsets)
+            assert np.array_equal(a.dists, b.dists)
+            assert np.array_equal(a.idxs, b.idxs)
+            assert np.array_equal(a.truncated, b.truncated)
+        else:
+            assert np.array_equal(a.dists, b.dists)
+            assert np.array_equal(a.idxs, b.idxs)
+        assert b.backend == "sharded"
+
+
+def test_sharded_self_query_excludes_self_like_monolithic():
+    mono = build_index(PTS, backend="brute")
+    shard = build_index(
+        PTS, backend="sharded", n_shards=6, child_backend="brute"
+    )
+    a = mono.query(None, KnnSpec(4))
+    b = shard.query(None, KnnSpec(4))
+    assert np.array_equal(a.dists, b.dists)
+    assert np.array_equal(a.idxs, b.idxs)
+    assert not (b.idxs == np.arange(len(PTS))[:, None]).any()
+    r = _pick_radius("l2")
+    a = mono.query(None, HybridSpec(4, r))
+    b = shard.query(None, HybridSpec(4, r))
+    assert np.array_equal(a.dists, b.dists)
+    assert np.array_equal(a.idxs, b.idxs)
+    a = mono.query(None, RangeSpec(r, max_neighbors=5))
+    b = shard.query(None, RangeSpec(r, max_neighbors=5))
+    assert np.array_equal(a.offsets, b.offsets)
+    assert np.array_equal(a.dists, b.dists)
+    assert np.array_equal(a.idxs, b.idxs)
+    assert np.array_equal(a.truncated, b.truncated)
+
+
+# -------------------------------------------------------------- pruning
+
+
+def test_sharded_prunes_and_tags_the_plan():
+    shard = build_index(
+        PTS, backend="sharded", n_shards=8, child_backend="brute"
+    )
+    res = shard.query(QS, HybridSpec(4, 0.05))  # tight ball: heavy pruning
+    assert res.timings["plan"].startswith("sharded/pruned=")
+    v, p = res.timings["shard_visits"], res.timings["shard_potential"]
+    assert p == len(QS) * 8
+    assert 0 < v < p  # pruned something, visited something
+    assert res.timings["plan"] == f"sharded/pruned={p - v}-of-{p}"
+    s = shard.stats()
+    assert s["shard_visits"] == v
+    assert s["shard_visits_pruned"] == p - v
+    assert 0 < s["prune_rate"] < 1
+    assert s["n_shards"] == 8 and s["child_backend"] == "brute"
+    assert len(s["children"]) == 8
+    # a kNN batch prunes too, and counters accumulate
+    res2 = shard.query(QS, KnnSpec(4))
+    v2 = res2.timings["shard_visits"]
+    assert v2 < res2.timings["shard_potential"]
+    assert shard.stats()["shard_visits"] == v + v2
+
+
+def test_sharded_pruning_is_conservative_under_cosine_bounds():
+    """Cosine bounds go through the transformed-cloud AABBs; pruned
+    answers must still match the oracle exactly (the bound is deflated,
+    never inflated)."""
+    mono = build_index(PTS, backend="brute")
+    shard = build_index(
+        PTS, backend="sharded", n_shards=8, child_backend="brute"
+    )
+    r = _pick_radius("cosine", 40.0)
+    a = mono.query(QS, RangeSpec(r), metric="cosine")
+    b = shard.query(QS, RangeSpec(r), metric="cosine")
+    assert b.timings["shard_visits"] < b.timings["shard_potential"]
+    assert np.array_equal(a.offsets, b.offsets)
+    assert np.array_equal(a.idxs, b.idxs)
+
+
+# ------------------------------------------------- planner interactions
+
+
+def test_sharded_stop_radius_takes_companion_trueknn_fallback():
+    oracle = build_index(PTS, backend="trueknn")
+    want = oracle.query(QS, KnnSpec(4, stop_radius=0.2))
+    shard = build_index(
+        PTS, backend="sharded", n_shards=4, child_backend="trueknn"
+    )
+    res = shard.query(QS, KnnSpec(4, stop_radius=0.2))
+    assert res.timings["plan"] == "knn_fallback"
+    assert res.backend == "sharded"
+    assert np.array_equal(res.dists, want.dists)
+    assert np.array_equal(res.idxs, want.idxs)
+
+
+def test_sharded_cfg_validation_and_nesting_guard():
+    with pytest.raises(ValueError, match="valid knobs"):
+        build_index(PTS, backend="sharded", shards=4)  # typo'd knob
+    with pytest.raises(ValueError, match="sharded children"):
+        build_index(PTS, backend="sharded", child_backend="sharded")
+    # child_cfg reaches the children (and bad child knobs fail loudly)
+    shard = build_index(
+        PTS, backend="sharded", n_shards=3, child_backend="trueknn",
+        child_cfg={"growth": 3.0},
+    )
+    assert all(c._growth == 3.0 for c in shard._children)
+    with pytest.raises(ValueError, match="valid knobs"):
+        build_index(
+            PTS, backend="sharded", child_backend="trueknn",
+            child_cfg={"growht": 3.0},
+        )
+
+
+def test_sharded_start_radius_is_a_seed_not_a_bound():
+    shard = build_index(
+        PTS, backend="sharded", n_shards=4, child_backend="brute"
+    )
+    plain = shard.query(QS, KnnSpec(3))
+    seeded = shard.query(QS, KnnSpec(3, start_radius=1e-6))
+    # seed semantics: the answer set is unchanged by start_radius
+    assert np.array_equal(plain.dists, seeded.dists)
+    assert np.array_equal(plain.idxs, seeded.idxs)
+
+
+def test_sharded_serves_through_neighbor_server_exactly():
+    from repro.api import NeighborServer
+
+    shard = build_index(
+        PTS, backend="sharded", n_shards=5, child_backend="brute"
+    )
+    direct = shard.query(QS, KnnSpec(4))
+    server = NeighborServer(indexes={"fabric": shard}, cache_size=0)
+    got = server.submit(QS, KnnSpec(4), index="fabric").result()
+    assert np.array_equal(got.dists, direct.dists)
+    assert np.array_equal(got.idxs, direct.idxs)
+    assert "fabric/knn/k=4/l2" in server.stats()["buckets"]
