@@ -36,8 +36,9 @@ from .common import emit, timed
 
 def _bench_spec(index, queries, spec, metric="l2"):
     res, secs = timed(lambda: index.query(queries, spec, metric=metric))
-    plan = res.timings.get("plan", "native")
-    return res, secs, plan
+    plan = res.timings.get("plan", "native")  # legacy tag (back-compat)
+    route = index.prepare(spec, metric=metric).explain()["route"]
+    return res, secs, plan, route
 
 
 def main(n=16_000, n_queries=512, k=8) -> dict:
@@ -49,14 +50,15 @@ def main(n=16_000, n_queries=512, k=8) -> dict:
 
     summary: dict = {"n": n, "n_queries": n_queries, "k": k, "cells": {}}
 
-    def record(name, res, secs, plan, derived=""):
+    def record(name, res, secs, plan, route, derived=""):
         us = secs * 1e6 / n_queries
         summary["cells"][name] = {
             "us_per_query": round(us, 2),
             "plan": plan,
+            "route": route,
             "n_tests": int(getattr(res, "n_tests", 0)),
         }
-        emit(f"query_plans/{name}", us, f"plan={plan} {derived}".strip())
+        emit(f"query_plans/{name}", us, f"route={route} {derived}".strip())
 
     # resident indexes; knn warms the trueknn grids so spec comparisons are
     # steady-state (the serving regime the API exists for)
@@ -68,33 +70,33 @@ def main(n=16_000, n_queries=512, k=8) -> dict:
     radius = warm_default_radius(warm.dists, tk)
 
     # -- spec kinds on the grid path ---------------------------------------
-    res, secs, plan = _bench_spec(tk, qs, KnnSpec(k))
-    record("trueknn/knn/l2", res, secs, plan, f"rounds={res.n_rounds}")
-    res, secs, plan = _bench_spec(tk, qs, RangeSpec(radius))
-    record("trueknn/range/l2", res, secs, plan,
+    res, secs, plan, route = _bench_spec(tk, qs, KnnSpec(k))
+    record("trueknn/knn/l2", res, secs, plan, route, f"rounds={res.n_rounds}")
+    res, secs, plan, route = _bench_spec(tk, qs, RangeSpec(radius))
+    record("trueknn/range/l2", res, secs, plan, route,
            f"nnz={len(res.idxs)} rows_max={int(res.counts.max())}")
-    res, secs, plan = _bench_spec(tk, qs, HybridSpec(k, radius))
+    res, secs, plan, route = _bench_spec(tk, qs, HybridSpec(k, radius))
     partial, empty = dropped_counts(res.dists)  # queries, not inf cells
-    record("trueknn/hybrid/l2", res, secs, plan,
+    record("trueknn/hybrid/l2", res, secs, plan, route,
            f"dropped_partial={partial} dropped_empty={empty}")
 
     # -- spec kinds on the dense kernel path -------------------------------
-    res, secs, plan = _bench_spec(br, qs, KnnSpec(k))
-    record("brute/knn/l2", res, secs, plan)
-    res, secs, plan = _bench_spec(br, qs, RangeSpec(radius))
-    record("brute/range/l2", res, secs, plan, f"nnz={len(res.idxs)}")
-    res, secs, plan = _bench_spec(br, qs, HybridSpec(k, radius))
-    record("brute/hybrid/l2", res, secs, plan)
+    res, secs, plan, route = _bench_spec(br, qs, KnnSpec(k))
+    record("brute/knn/l2", res, secs, plan, route)
+    res, secs, plan, route = _bench_spec(br, qs, RangeSpec(radius))
+    record("brute/range/l2", res, secs, plan, route, f"nnz={len(res.idxs)}")
+    res, secs, plan, route = _bench_spec(br, qs, HybridSpec(k, radius))
+    record("brute/hybrid/l2", res, secs, plan, route)
 
     # -- metric dispatch ---------------------------------------------------
-    res, secs, plan = _bench_spec(br, qs, KnnSpec(k), metric="l1")
-    record("brute/knn/l1", res, secs, plan)
-    res, secs, plan = _bench_spec(br, qs, KnnSpec(k), metric="linf")
-    record("brute/knn/linf", res, secs, plan)
-    res, secs, plan = _bench_spec(tk, qs, KnnSpec(k), metric="cosine")
-    record("trueknn/knn/cosine", res, secs, plan)
-    res, secs, plan = _bench_spec(tk, qs, KnnSpec(k), metric="l1")
-    record("trueknn/knn/l1", res, secs, plan)
+    res, secs, plan, route = _bench_spec(br, qs, KnnSpec(k), metric="l1")
+    record("brute/knn/l1", res, secs, plan, route)
+    res, secs, plan, route = _bench_spec(br, qs, KnnSpec(k), metric="linf")
+    record("brute/knn/linf", res, secs, plan, route)
+    res, secs, plan, route = _bench_spec(tk, qs, KnnSpec(k), metric="cosine")
+    record("trueknn/knn/cosine", res, secs, plan, route)
+    res, secs, plan, route = _bench_spec(tk, qs, KnnSpec(k), metric="l1")
+    record("trueknn/knn/l1", res, secs, plan, route)
 
     l2 = summary["cells"]["brute/knn/l2"]["us_per_query"]
     l1 = summary["cells"]["brute/knn/l1"]["us_per_query"]
@@ -104,7 +106,7 @@ def main(n=16_000, n_queries=512, k=8) -> dict:
         "query_plans/summary",
         summary["cells"]["trueknn/knn/l2"]["us_per_query"],
         f"l1_over_l2_brute={summary['l1_over_l2_brute']}x "
-        f"cosine_plan={summary['cells']['trueknn/knn/cosine']['plan']}",
+        f"cosine_route={summary['cells']['trueknn/knn/cosine']['route']}",
     )
     return summary
 

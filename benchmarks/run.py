@@ -24,6 +24,7 @@ def main() -> None:
         bench_k,
         bench_kernel,
         bench_percentile,
+        bench_plan_cache,
         bench_query_plans,
         bench_rounds,
         bench_serve,
@@ -67,6 +68,11 @@ def main() -> None:
     with open("BENCH_shards.json", "w") as f:
         json.dump(shards_summary, f, indent=2, default=str)
     print("# wrote BENCH_shards.json", flush=True)
+    _section("plan cache (prepared plans: executable reuse, n_tests parity)")
+    plan_cache_summary = bench_plan_cache.main()
+    with open("BENCH_plan_cache.json", "w") as f:
+        json.dump(plan_cache_summary, f, indent=2, default=str)
+    print("# wrote BENCH_plan_cache.json", flush=True)
     _section("kernel microbench")
     bench_kernel.main()
     print(f"# total {time.time()-t0:.1f}s", flush=True)

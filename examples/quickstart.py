@@ -85,5 +85,19 @@ print(
     f"{res2.timings['grid_builds']} built "
     f"(start radius {res2.timings['start_radius_source']})"
 )
+
+# -- prepared plans: plan once, execute many ---------------------------------
+# index.query re-plans per call; a held QueryPlan amortizes route
+# construction and reuses compiled executables across batches (the
+# difference is decisive on the sharded fabric — see docs/api.md).
+plan = index.prepare(KnnSpec(k=5))
+plan(qs)
+plan(qs + np.float32(0.002))
+print(
+    f"prepared plan: route={plan.explain()['route']} "
+    f"executable-cache {plan.cache_stats()['hits']} hits / "
+    f"{plan.cache_stats()['misses']} misses over "
+    f"{plan.cache_stats()['executions']} executions"
+)
 print(f"registered backends: {available_backends()}")
 print(f"registered metrics:  {available_metrics()}")

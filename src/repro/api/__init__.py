@@ -6,9 +6,17 @@ search space grows until every query resolves — maps to two calls::
     from repro.api import build_index, KnnSpec, RangeSpec, HybridSpec
 
     index = build_index(points, backend="trueknn")    # build (resident)
-    res = index.query(batch_a, KnnSpec(k=8))          # KNNResult
+    plan = index.prepare(KnnSpec(k=8))                # plan once ...
+    res = plan(batch_a)                               # ... execute many
+    res = index.query(batch_a, KnnSpec(k=8))          # one-shot wrapper
     rng = index.query(batch_b, RangeSpec(radius=0.5)) # RangeResult (CSR)
     cap = index.query(batch_c, HybridSpec(8, 0.5))    # kNN, radius-capped
+
+``index.prepare`` returns a first-class ``QueryPlan``: plan construction
+(route selection, metric views, fallbacks) happens once, ``plan(queries)``
+executes it, ``plan.explain()`` returns the structured route tree, and the
+plan's shape-bucketed executable cache keeps repeated batches from
+re-jitting (see ``repro.api.plan`` and docs/api.md).
 
 Three orthogonal registries make the surface grow additively:
 
@@ -67,6 +75,7 @@ from .query import HybridSpec, KnnSpec, QuerySpec, RangeSpec
 
 from . import backends  # registers the built-in backends  # noqa: E402
 from .index import NeighborIndex, build_index
+from .plan import PlanContext, QueryPlan
 from .registry import available_backends, get_backend, register_backend
 from .server import (
     AdmissionError,
@@ -91,6 +100,8 @@ __all__ = [
     "normalize_rows",
     "NeighborIndex",
     "build_index",
+    "QueryPlan",
+    "PlanContext",
     "NeighborServer",
     "Ticket",
     "AdmissionError",

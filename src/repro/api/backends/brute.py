@@ -74,7 +74,8 @@ class BruteIndex(NeighborIndex):
             timings={"query_seconds": time.perf_counter() - t0},
         )
 
-    def execute_knn(self, queries, spec: KnnSpec, metric: Metric) -> KNNResult:
+    def execute_knn(self, queries, spec: KnnSpec, metric: Metric,
+                    ctx=None) -> KNNResult:
         if spec.stop_radius is not None:
             raise ValueError("brute backend has no radius schedule; "
                              "stop_radius is not meaningful here")
@@ -82,10 +83,12 @@ class BruteIndex(NeighborIndex):
         # (backend-defined semantics, same as PR 1's ``radius=``).
         return self._knn(queries, spec.k, metric, cut=spec.start_radius)
 
-    def execute_hybrid(self, queries, spec: HybridSpec, metric: Metric):
+    def execute_hybrid(self, queries, spec: HybridSpec, metric: Metric,
+                       ctx=None):
         return self._knn(queries, spec.k, metric, cut=spec.radius)
 
-    def execute_range(self, queries, spec: RangeSpec, metric: Metric):
+    def execute_range(self, queries, spec: RangeSpec, metric: Metric,
+                      ctx=None):
         from ..planner import range_via_counted_topk
 
         res = range_via_counted_topk(

@@ -79,12 +79,19 @@ class DistributedIndex(NeighborIndex):
         self._batches = 0
         self._total_tests = 0
 
-    def execute_knn(self, queries, spec: KnnSpec, metric: Metric) -> KNNResult:
+    def supports_knn_spec(self, spec: KnnSpec) -> bool:
+        # no radius schedule to stop: the planner routes stop_radius specs
+        # to the companion-trueknn fallback (plan tag "knn_fallback") at
+        # plan-construction time
+        return spec.stop_radius is None
+
+    def execute_knn(self, queries, spec: KnnSpec, metric: Metric,
+                    ctx=None) -> KNNResult:
         """Native kNN over the sharded cloud (L2 only; range/hybrid specs
         and reducible metrics arrive through the planner's generic plans)."""
         if spec.stop_radius is not None:
-            # no radius schedule to stop: the planner routes this spec to
-            # its companion-trueknn fallback (plan tag "knn_fallback")
+            # belt and braces for direct hook calls; the planner never
+            # routes here (supports_knn_spec said no)
             raise NotImplementedError(
                 "distributed backend has no native stop_radius path"
             )

@@ -125,7 +125,8 @@ class FixedRadiusIndex(NeighborIndex):
             )
         return float(r)
 
-    def execute_knn(self, queries, spec: KnnSpec, metric: Metric) -> KNNResult:
+    def execute_knn(self, queries, spec: KnnSpec, metric: Metric,
+                    ctx=None) -> KNNResult:
         if spec.stop_radius is not None:
             raise ValueError("fixed_radius backend searches one radius; "
                              "use backend='trueknn' for stop_radius")
@@ -133,11 +134,13 @@ class FixedRadiusIndex(NeighborIndex):
             queries, spec.k, self.knn_spec_radius_cut(spec), metric
         )
 
-    def execute_hybrid(self, queries, spec: HybridSpec, metric: Metric):
+    def execute_hybrid(self, queries, spec: HybridSpec, metric: Metric,
+                       ctx=None):
         # hybrid IS this backend's native shape: k best within the ball
         return self._one_round(queries, spec.k, spec.radius, metric)
 
-    def execute_range(self, queries, spec: RangeSpec, metric: Metric):
+    def execute_range(self, queries, spec: RangeSpec, metric: Metric,
+                      ctx=None):
         from ..planner import range_from_counted_round
 
         q, qid = self._queries_and_ids(queries)

@@ -17,15 +17,15 @@ visit, never a missed neighbor.
 
 Per spec kind:
 
-* ``KnnSpec(k)`` runs TrueKNN-style rounds over *shards*: each round grows
-  a radius cut and visits only the unvisited shards whose bound is within
-  it (every unresolved query always visits at least its nearest unvisited
-  shard, so a batch needs at most S rounds); a query resolves once its
-  k-th best candidate is closer than every unvisited shard's bound.
-  ``start_radius`` is a seed here and is ignored (children schedule
-  themselves); ``stop_radius`` raises ``NotImplementedError`` so the
-  planner serves it through the cached companion-trueknn fallback with
-  exact monolithic semantics (same route as the distributed backend).
+* ``KnnSpec(k)`` runs TrueKNN-style rounds over *shards* with one shared
+  radius cut: each round grows the cut geometrically (seeded by the fused
+  warm-start estimate) and searches every in-cut shard with a single
+  radius-capped child pass — the monolith's round shape restricted to
+  unpruned shards, so ``n_tests`` tracks the monolith.  A query resolves
+  once its k-th candidate lies within the searched cut.  ``start_radius``
+  seeds the schedule (never bounds the answer); ``stop_radius`` routes to
+  the planner's cached companion-trueknn fallback with exact monolithic
+  semantics (same route as the distributed backend).
 * ``RangeSpec(r)`` / ``HybridSpec(k, r)`` cull shards outside ``r`` up
   front — one pruned pass, then the merge.
 
@@ -33,6 +33,19 @@ Every pruned plan tags ``timings["plan"] = "sharded/pruned=<m-of-n>"``
 (m of the n potential (query, shard) visits skipped), and ``stats()``
 accumulates ``shard_visits`` / ``shard_visits_pruned`` across the index's
 life, which is what ``benchmarks/bench_shards.py`` asserts on.
+
+Two amortizations ride the QueryPlan surface:
+
+* **Fused warm start.**  kNN children with seed-semantics start radii
+  (trueknn/distributed) all start from ONE shared radius estimate — the
+  EMA'd 25th percentile of previous batches' merged k-th-NN distances
+  (first l2 batch: paper Alg. 2 sampling over the whole cloud, paid once)
+  — instead of each shard re-running its own tiny-radius ramp, which is
+  what kept sharded ``n_tests`` far above the monolith's.
+* **Canonical visit-set shapes.**  Under a prepared plan
+  (``index.prepare``), per-shard query subsets are padded to pow2 sizes
+  so the child engines compile a handful of executables that every later
+  batch mix reuses (see ``repro.api.plan``).
 
 cfg:
   n_shards:      partition arity (default 8; clamped to N).
@@ -50,13 +63,19 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core.partition import aabb_min_dists, partition_points
+from repro.core.grid import _next_pow2
+from repro.core.partition import (
+    aabb_max_dists,
+    aabb_min_dists,
+    partition_points,
+)
 from repro.core.result import (
     KNNResult,
     RangeResult,
     RoundStats,
     merge_knn,
     merge_range,
+    slice_rows,
     topk_merge_rows,
 )
 
@@ -86,6 +105,10 @@ class ShardedIndex(NeighborIndex):
 
     native_metrics = frozenset({"l2", "l1", "linf", "cosine"})
     knn_start_radius_semantics = "seed"
+    #: canonical visit-set floor under prepared plans: subsets pad to
+    #: pow2 sizes no smaller than this, so tiny shard visits share one
+    #: compiled executable instead of one per exact subset size
+    MIN_SUBSET = 16
 
     def __init__(
         self,
@@ -125,12 +148,24 @@ class ShardedIndex(NeighborIndex):
             g[-1] = self.n_points
             self._gmaps.append(g)
         self._aabb_views: dict = {}  # metric name -> transformed AABBs
+        # fused cross-shard warm-start seeds, per metric (query-metric
+        # units): ONE radius estimate seeds the whole kNN round schedule —
+        # every child searches the same growing cut — so no shard ever
+        # re-runs its own tiny-radius ramp.  A scheduling seed only;
+        # answers never depend on it.
+        self._warm_seed: dict = {}
+        self._warm_seed_ema = 0.3
+        self._sampled_seeds: dict = {}  # metric name -> Alg. 2 seed
+        self._seed_children = (
+            self._children[0].knn_start_radius_semantics == "seed"
+        )
         self._c = {
             "batches": 0,
             "queries_served": 0,
             "shard_visits": 0,
             "shard_visits_pruned": 0,
             "shard_rounds": 0,
+            "shard_searches": 0,
         }
 
     # -- geometry ----------------------------------------------------------
@@ -171,6 +206,25 @@ class ShardedIndex(NeighborIndex):
             return np.zeros((q.shape[0], self.n_shards))
         return _deflate(b)
 
+    def _bounds_upper(self, q: np.ndarray, metric: Metric) -> np.ndarray:
+        """(Q, S) inflated metric-space upper bounds (farthest corner): a
+        search radius past every shard's bound has provably covered the
+        cloud — the kNN round loop's termination guard when fewer than k
+        candidates exist."""
+        if metric.name in ("l1", "linf", "l2"):
+            b = aabb_max_dists(self._part.aabbs, q, metric.name)
+        elif metric.has_l2_view:
+            tq = metric.transform_points(np.asarray(q, np.float32))
+            b = np.asarray(
+                metric.dist_from_l2(
+                    aabb_max_dists(self._transformed_aabbs(metric), tq, "l2")
+                ),
+                np.float64,
+            )
+        else:  # no bound: rely on the k-th-candidate criterion alone
+            return np.full((q.shape[0], self.n_shards), np.inf)
+        return b * (1.0 + PRUNE_SLACK) + 1e-12
+
     # -- shared plumbing ---------------------------------------------------
 
     def _prep(self, queries):
@@ -184,9 +238,115 @@ class ShardedIndex(NeighborIndex):
             return self._pts, np.arange(self.n_points, dtype=np.int64)
         return np.asarray(queries, np.float32), None
 
-    def _query_child(self, s: int, rows, spec, metric: Metric):
-        res = self._children[s].query(rows, spec, metric=metric.name)
+    def _query_child(self, s: int, rows, spec, metric: Metric, ctx=None):
+        """Run one shard's child index over a visit-set.
+
+        Under a prepared plan (``ctx.canonical_shapes``), the subset is
+        padded to the next power of two (copies of its first row, sliced
+        off the answer) so the child engines see a handful of canonical
+        subset shapes however the batch's shard mix varies — repeated
+        batches reuse compiled executables instead of re-jitting per mix.
+        The plan's executable cache counts each (shard, kind, shape)
+        bucket.  The context is threaded into the child's planner call, so
+        warm-start seeds and nested bucket accounting survive the hop.
+        """
+        from ..planner import execute
+
+        rows = np.asarray(rows, np.float32)
+        m = rows.shape[0]
+        if ctx is not None and ctx.canonical_shapes:
+            # floor at MIN_SUBSET rows: tiny visit-sets collapse into ONE
+            # canonical shape (a handful of duplicated rows is far cheaper
+            # than an executable compiled per exact subset size)
+            m_pad = _next_pow2(max(m, self.MIN_SUBSET))
+            ctx.record_bucket(
+                ("shard", s, spec.kind, getattr(spec, "k", None), m_pad)
+            )
+            if m_pad > m:
+                rows = np.concatenate(
+                    [rows, np.repeat(rows[:1], m_pad - m, axis=0)]
+                )
+        res = execute(self._children[s], rows, spec, metric.name, ctx)
+        if rows.shape[0] > m:
+            res = slice_rows(res, m)
         return res
+
+    # -- fused cross-shard warm start --------------------------------------
+
+    def _sample_seed(self, metric: Metric) -> float:
+        """Paper Alg. 2 (min 4-NN distance of 100 samples) over the whole
+        cloud — paid once instead of once per shard.  l2 goes through the
+        shared fast-kernel helper; other metrics fall back to the
+        registry's reference ``pairwise`` (dense, but 100 x N once)."""
+        if metric.name == "l2":
+            from repro.core.sampling import sample_start_radius
+
+            return float(sample_start_radius(self._pts))
+        n = self.n_points
+        rng = np.random.default_rng(0)
+        sel = rng.choice(n, size=min(100, n), replace=False)
+        D = np.asarray(metric.pairwise(self._pts[sel], self._pts))
+        D[np.arange(len(sel)), sel] = np.inf  # self matches
+        kq = min(4, n - 1)
+        d = np.sort(D, axis=1)[:, :kq]
+        d = d[np.isfinite(d) & (d > 0)]
+        return float(d.min()) if d.size else 1e-6
+
+    def _fused_seed(self, metric: Metric, ctx=None) -> float:
+        """One shared start radius for the whole kNN round schedule: the
+        per-metric EMA of previous batches' resolved radii, a prepared
+        plan's cross-plan seed, or (first batch) Alg. 2 sampling over the
+        whole cloud.  A scheduling seed only — answers never depend on
+        it."""
+        r = self._warm_seed.get(metric.name)
+        if r is None and ctx is not None and ctx.warm_radius is not None:
+            r = ctx.warm_radius
+        if r is None:
+            r = self._sampled_seeds.get(metric.name)
+            if r is None:
+                r = self._sample_seed(metric)
+                self._sampled_seeds[metric.name] = r
+        return float(r)
+
+    def _update_seed(self, resolved_radii, metric: Metric, ctx=None) -> None:
+        """Refine the fused seed from the radii at which this batch's
+        queries resolved (25th percentile, EMA'd — the same statistic the
+        trueknn backend's own warm start tracks), and publish it to the
+        executing plan for cross-plan reuse."""
+        fin = np.asarray(resolved_radii, np.float64)
+        fin = fin[np.isfinite(fin)]
+        if not fin.size:
+            return
+        target = max(float(np.percentile(fin, 25.0)), 1e-12)
+        prev = self._warm_seed.get(metric.name)
+        if prev is None:
+            self._warm_seed[metric.name] = target
+        else:
+            w = self._warm_seed_ema
+            self._warm_seed[metric.name] = (1.0 - w) * prev + w * target
+        if ctx is not None:
+            ctx.warm_radius = self._warm_seed[metric.name]
+
+    def _child_round_spec(self, k_child: int, r: float, metric: Metric):
+        """The spec that asks a child for its k best *within radius r* in
+        one cheap pass: a degenerate ``start == stop`` KnnSpec on
+        radius-scheduled children (exactly one grid round at r — no
+        per-shard ramp), a plain HybridSpec otherwise (schedule-free
+        children run one dense/grid pass with the cut applied; children
+        that reject ``stop_radius`` outright — the distributed engine —
+        must not be handed a spec the planner would detour around their
+        own engine to serve)."""
+        spec = KnnSpec(k_child, start_radius=r, stop_radius=r)
+        if (
+            self._seed_children
+            and self._children[0].supports_knn_spec(spec)
+            and (
+                metric.name in self._children[0].native_metrics
+                or metric.has_l2_view
+            )
+        ):
+            return spec
+        return HybridSpec(k_child, r)
 
     def _scatter_knn(self, res, sel, q_total: int, width: int, s: int):
         """Lift a child's subset answer to a full-Q, global-index part."""
@@ -280,13 +440,64 @@ class ShardedIndex(NeighborIndex):
         res.backend = self.backend_name
         return res
 
+    # -- planner contract --------------------------------------------------
+
+    def supports_knn_spec(self, spec: KnnSpec) -> bool:
+        # stop_radius semantics are defined by ONE radius schedule over
+        # the whole cloud; per-shard schedules diverge, so the planner's
+        # companion-trueknn fallback answers with monolithic semantics
+        return spec.stop_radius is None
+
+    def plan_details(self, spec, metric: Metric) -> tuple:
+        props = {
+            "n_shards": self.n_shards,
+            "partition": self._part.method,
+            "child_backend": self._child_backend,
+            "pruning": (
+                "shared radius cut grown over rounds"
+                if isinstance(spec, KnnSpec)
+                else "up-front radius cull"
+            ),
+            "warm_seed": self._warm_seed.get(metric.name),
+        }
+
+        def children():  # built on first explain(): one-shot plans skip it
+            from ..planner import build_plan
+
+            nodes = []
+            for s, child in enumerate(self._children):
+                nc = child.n_points
+                if isinstance(spec, KnnSpec):
+                    cs = KnnSpec(min(spec.k, nc))
+                elif isinstance(spec, HybridSpec):
+                    cs = HybridSpec(min(spec.k, nc), spec.radius)
+                else:
+                    cs = spec
+                node = build_plan(child, cs, metric.name)
+                node.props = dict(node.props, shard=s, shard_points=nc)
+                nodes.append(node)
+            return nodes
+
+        return "sharded/pruned=<m-of-n>", props, children
+
     # -- spec execution ----------------------------------------------------
 
-    def execute_knn(self, queries, spec: KnnSpec, metric: Metric) -> KNNResult:
+    def execute_knn(self, queries, spec: KnnSpec, metric: Metric,
+                    ctx=None) -> KNNResult:
+        """TrueKNN rounds over the fabric: one *shared* radius cut grows
+        geometrically from the fused warm seed; each round, every
+        unresolved query searches every shard within the cut — a single
+        radius-capped pass per (shard, round), exactly the monolith's
+        round shape restricted to unpruned shards, so the work metric
+        tracks the monolith instead of paying a full unbounded
+        within-shard kNN per visit.  A query resolves once its k-th
+        candidate lies within the searched cut (everything within the cut
+        has provably been pooled), or the cut covers the whole cloud.
+        The pool is rebuilt from the round's (complete-within-cut) parts,
+        so re-searched shards never duplicate candidates."""
         if spec.stop_radius is not None:
-            # stop_radius semantics are defined by ONE radius schedule over
-            # the whole cloud; per-shard schedules diverge, so the planner's
-            # companion-trueknn fallback answers with monolithic semantics
+            # belt and braces for direct hook calls; the planner never
+            # routes here (supports_knn_spec said no)
             raise NotImplementedError
         from ..planner import shard_visit_mask
 
@@ -298,28 +509,39 @@ class ShardedIndex(NeighborIndex):
         pool_d = np.full((q_total, k_eff), np.inf, np.float32)
         pool_i = np.full((q_total, k_eff), n, np.int32)
         bounds = self._bounds(q, metric)
-        visited = np.zeros((q_total, s_total), bool)
+        cover = self._bounds_upper(q, metric).max(axis=1)  # (Q,)
+        floor = bounds.min(axis=1)  # nearest shard per query
+        # the caller's explicit start_radius is a schedule seed (never a
+        # bound); otherwise one fused estimate seeds every shard's rounds
+        seed = (
+            float(spec.start_radius)
+            if spec.start_radius is not None
+            else self._fused_seed(metric, ctx)
+        )
         unresolved = np.ones((q_total,), bool)
+        resolved_at = np.full((q_total,), np.nan)
+        ever = np.zeros((q_total, s_total), bool)  # unique-visit accounting
         rounds: list = []
         total_tests = 0
-        total_visits = 0
+        searches = 0
         r = 0.0
         while unresolved.any():
             tr = time.perf_counter()
-            ub = np.where(visited, np.inf, bounds)
-            floor = ub.min(axis=1)  # per-query nearest unvisited shard
             pend = floor[unresolved]
             pend = pend[np.isfinite(pend)]
-            if pend.size:
-                r = max(r * self._growth, float(pend.min()))
-            # the per-query floor guarantees progress: every unresolved
-            # query visits at least its nearest unvisited shard this round
-            cut = np.maximum(r, floor)
-            visit_now = (
-                unresolved[:, None]
-                & ~visited
-                & shard_visit_mask(bounds, cut)
-            )
+            base = float(pend.min()) if pend.size else 0.0
+            if not rounds:
+                r = max(seed, base, 1e-12)
+            else:
+                # geometric growth; jump straight to the nearest pending
+                # shard when every remaining query is farther than that
+                r = max(r * self._growth, base)
+            visit_now = unresolved[:, None] & shard_visit_mask(bounds, r)
+            # fresh pool rows for this round's searchers: the round's parts
+            # are complete within r, and re-searched shards would otherwise
+            # duplicate candidates already pooled at a smaller cut
+            pool_d[unresolved] = np.inf
+            pool_i[unresolved] = n
             round_tests = 0
             for s in range(s_total):
                 sel = np.flatnonzero(visit_now[:, s])
@@ -327,7 +549,8 @@ class ShardedIndex(NeighborIndex):
                     continue
                 k_child = min(k_eff, self._children[s].n_points)
                 res = self._query_child(
-                    s, q[sel], KnnSpec(k_child), metric
+                    s, q[sel], self._child_round_spec(k_child, r, metric),
+                    metric, ctx,
                 )
                 round_tests += int(res.n_tests)
                 cd = np.asarray(res.dists)
@@ -335,19 +558,17 @@ class ShardedIndex(NeighborIndex):
                 pool_d[sel], pool_i[sel] = topk_merge_rows(
                     pool_d[sel], pool_i[sel], cd, ci, k_eff
                 )
-                total_visits += int(sel.size)
-            visited |= visit_now
+                searches += int(sel.size)
+            ever |= visit_now
             total_tests += round_tests
-            # resolved: the k-th best (self excluded) beats every
-            # unvisited shard's bound — or no shard is left to visit
-            ub = np.where(visited, np.inf, bounds)
-            minub = ub.min(axis=1)
+            # resolved: the k-th best (self excluded) lies within the
+            # searched cut — or the cut provably covers the whole cloud
             if self_ids is not None:
                 has_self = (pool_i == self_ids[:, None]).any(axis=1)
                 kth = np.where(has_self, pool_d[:, k], pool_d[:, k - 1])
             else:
                 kth = pool_d[:, k - 1]
-            resolved = unresolved & ((kth < minub) | ~np.isfinite(minub))
+            resolved = unresolved & ((kth <= r) | (r >= cover))
             rounds.append(
                 RoundStats(
                     len(rounds),
@@ -360,12 +581,15 @@ class ShardedIndex(NeighborIndex):
                     time.perf_counter() - tr,
                 )
             )
+            resolved_at[resolved] = r
             unresolved &= ~resolved
         self._c["shard_rounds"] += len(rounds)
+        self._c["shard_searches"] += searches
         if self_ids is not None:
             d, i = self._strip_self_knn(pool_d, pool_i, self_ids, k, n)
         else:
             d, i = pool_d[:, :k], pool_i[:, :k]
+        self._update_seed(resolved_at, metric, ctx)
         out = KNNResult(
             dists=d,
             idxs=i,
@@ -378,9 +602,11 @@ class ShardedIndex(NeighborIndex):
             rounds=rounds,
             final_radius=rounds[-1].radius if rounds else None,
         )
-        return self._account(q_total, total_visits, t0, out)
+        out.timings["shard_searches"] = searches
+        return self._account(q_total, int(ever.sum()), t0, out)
 
-    def execute_hybrid(self, queries, spec: HybridSpec, metric: Metric):
+    def execute_hybrid(self, queries, spec: HybridSpec, metric: Metric,
+                       ctx=None):
         from ..planner import shard_visit_mask
 
         t0 = time.perf_counter()
@@ -395,7 +621,7 @@ class ShardedIndex(NeighborIndex):
                 continue
             k_child = min(k_eff, self._children[s].n_points)
             res = self._query_child(
-                s, q[sel], HybridSpec(k_child, spec.radius), metric
+                s, q[sel], HybridSpec(k_child, spec.radius), metric, ctx
             )
             parts.append(self._scatter_knn(res, sel, q_total, k_eff, s))
             visits += int(sel.size)
@@ -423,7 +649,8 @@ class ShardedIndex(NeighborIndex):
         out.found = np.isfinite(out.dists).sum(axis=1).astype(np.int64)
         return self._account(q_total, visits, t0, out)
 
-    def execute_range(self, queries, spec: RangeSpec, metric: Metric):
+    def execute_range(self, queries, spec: RangeSpec, metric: Metric,
+                      ctx=None):
         from ..planner import shard_visit_mask
 
         t0 = time.perf_counter()
@@ -441,7 +668,7 @@ class ShardedIndex(NeighborIndex):
                 continue
             res = self._query_child(
                 s, q[sel], RangeSpec(spec.radius, max_neighbors=m_child),
-                metric,
+                metric, ctx,
             )
             part = self._scatter_range(res, sel, q_total, s)
             if self_ids is not None:
@@ -476,6 +703,7 @@ class ShardedIndex(NeighborIndex):
             partition=self._part.method,
             child_backend=self._child_backend,
             shard_sizes=self._part.sizes.tolist(),
+            warm_seed=dict(self._warm_seed),
             prune_rate=(
                 round(self._c["shard_visits_pruned"] / potential, 4)
                 if potential

@@ -168,8 +168,14 @@ class TrueKNNIndex(NeighborIndex):
             self._grids.pop(next(iter(self._grids)))
         return g, False
 
-    def _start_radius(self, radius: Optional[float]):
-        """(radius, source) — explicit > warm EMA > Alg. 2 sampling."""
+    def _start_radius(self, radius: Optional[float],
+                      shared: Optional[float] = None):
+        """(radius, source) — explicit > warm EMA > shared plan seed >
+        Alg. 2 sampling.  ``shared`` is a prepared plan's cross-plan
+        warm-start hint (``PlanContext.warm_radius``): a scheduling seed
+        only, so a scale mismatch costs at most extra ramp rounds, never
+        correctness — and it is outranked the moment this index has warm
+        state of its own."""
         if radius is not None:
             return max(float(radius), 1e-12), "explicit"
         if self._warm_start and self._warm_r is not None:
@@ -185,22 +191,27 @@ class TrueKNNIndex(NeighborIndex):
                 )
                 r = self._anchor * self._growth**j
             return r, "warm"
+        if shared is not None:
+            return max(float(shared), 1e-12), "shared"
         if self._sampled_r is None:
             self._sampled_r = sample_start_radius(self._pts, seed=self._seed)
         return self._sampled_r, "sampled"
 
     # -- the hot path ------------------------------------------------------
 
-    def execute_knn(self, queries, spec: KnnSpec, metric: Metric) -> KNNResult:
+    def execute_knn(self, queries, spec: KnnSpec, metric: Metric,
+                    ctx=None) -> KNNResult:
         return self._run_knn(
             queries,
             spec.k,
             radius=spec.start_radius,
             stop_radius=spec.stop_radius,
             metric_name=metric.name,
+            shared_radius=None if ctx is None else ctx.warm_radius,
         )
 
-    def execute_hybrid(self, queries, spec: HybridSpec, metric: Metric):
+    def execute_hybrid(self, queries, spec: HybridSpec, metric: Metric,
+                       ctx=None):
         # same driver, but the cap is searched exactly: the last round's
         # radius is spec.radius itself, so hybrid answers match
         # knn-then-filter bit-for-bit (modulo ties) at multi-round cost.
@@ -213,7 +224,8 @@ class TrueKNNIndex(NeighborIndex):
             metric_name=metric.name,
         )
 
-    def execute_range(self, queries, spec: RangeSpec, metric: Metric):
+    def execute_range(self, queries, spec: RangeSpec, metric: Metric,
+                      ctx=None):
         from ..planner import range_from_counted_round
 
         r = float(spec.radius)
@@ -268,6 +280,7 @@ class TrueKNNIndex(NeighborIndex):
         stop_radius: Optional[float] = None,
         cap_exact: bool = False,
         metric_name: str = "l2",
+        shared_radius: Optional[float] = None,
     ) -> KNNResult:
         t_call = time.perf_counter()
         n, d = self._pts.shape
@@ -281,7 +294,7 @@ class TrueKNNIndex(NeighborIndex):
             assert k <= n
         q_total = q_all.shape[0]
 
-        r, r_source = self._start_radius(radius)
+        r, r_source = self._start_radius(radius, shared_radius)
         # A warm/sampled start above stop_radius would break out before any
         # round ran and hand back an empty answer that depends on hidden
         # index state; clamp so at least one round searches at the stop

@@ -14,6 +14,12 @@ hybrid, counted/oversized-k sweeps for range, monotone L2 reduction or the
 exact brute engine for non-native metrics) otherwise.  The PR-1 signature
 ``query(queries, k, radius=..., stop_radius=...)`` survives as a deprecated
 adapter that constructs a ``KnnSpec``.
+
+Since the QueryPlan redesign, the explicit two-phase form is
+``plan = index.prepare(spec, metric=...)`` then ``plan(queries)`` — plan
+construction and compiled-executable reuse are amortized across batches
+(see ``repro.api.plan``), and ``query`` is a thin prepare-then-call
+wrapper kept for one-shot use.
 """
 
 from __future__ import annotations
@@ -148,25 +154,68 @@ class NeighborIndex(abc.ABC):
                     "pass either a QuerySpec or the legacy k/radius/"
                     "stop_radius keywords, not both"
                 )
-        from .planner import execute  # late import: planner imports index
+        from .plan import QueryPlan  # late import: plan imports index
 
-        return execute(self, queries, spec, metric)
+        # thin prepare-then-call wrapper: a throwaway plan with legacy
+        # shapes (no canonicalization), so one-shot callers see exactly the
+        # engine shapes and counters they always did.  Hold a prepared plan
+        # (``index.prepare``) to amortize planning and compiled executables.
+        return QueryPlan(self, spec, metric, canonical_shapes=False)(queries)
+
+    def prepare(
+        self,
+        spec: QuerySpec,
+        *,
+        metric: str = "l2",
+        canonical_shapes: bool = True,
+    ):
+        """Prepare a reusable :class:`repro.api.plan.QueryPlan` for
+        ``spec``/``metric``: ``plan = index.prepare(KnnSpec(8))`` then
+        ``plan(queries)`` per batch.  Answers are identical to ``query``;
+        repeated batches reuse the constructed route and the shape-bucketed
+        compiled executables (``canonical_shapes=False`` disables the
+        pow2 shape canonicalization and keeps exact legacy engine shapes).
+        ``plan.explain()`` returns the structured route tree."""
+        from .plan import QueryPlan
+
+        return QueryPlan(
+            self, spec, metric, canonical_shapes=canonical_shapes
+        )
 
     # -- backend capability hooks (planner contract) ----------------------
 
+    def supports_knn_spec(self, spec: KnnSpec) -> bool:
+        """Whether ``execute_knn`` serves this spec variant natively; the
+        planner routes unsupported variants to the cached companion-trueknn
+        fallback at *plan-construction* time (backends with no radius
+        schedule reject ``stop_radius`` here)."""
+        return True
+
+    def plan_details(self, spec: QuerySpec, metric: Metric) -> tuple:
+        """(tag, props, children) of this backend's native plan node —
+        what ``plan.explain()`` shows for the native route.  ``tag`` is
+        the legacy ``timings["plan"]`` string the route emits (static
+        prefix for dynamic tags); composite backends add per-shard child
+        plan nodes."""
+        return "native", {}, []
+
     @abc.abstractmethod
-    def execute_knn(self, queries, spec: KnnSpec, metric: Metric) -> KNNResult:
-        """Native kNN path.  ``metric`` is guaranteed ∈ ``native_metrics``."""
+    def execute_knn(
+        self, queries, spec: KnnSpec, metric: Metric, ctx=None
+    ) -> KNNResult:
+        """Native kNN path.  ``metric`` is guaranteed ∈ ``native_metrics``;
+        ``ctx`` is the executing plan's ``PlanContext`` (None for bare
+        calls)."""
 
     def execute_range(
-        self, queries, spec: RangeSpec, metric: Metric
+        self, queries, spec: RangeSpec, metric: Metric, ctx=None
     ) -> RangeResult:
         """Native range path; raise NotImplementedError for the generic
         oversized-k sweep."""
         raise NotImplementedError
 
     def execute_hybrid(
-        self, queries, spec: HybridSpec, metric: Metric
+        self, queries, spec: HybridSpec, metric: Metric, ctx=None
     ) -> KNNResult:
         """Native radius-capped kNN; raise NotImplementedError for the
         generic knn-then-filter plan."""

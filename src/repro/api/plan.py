@@ -1,0 +1,181 @@
+"""QueryPlan — the prepare/execute query surface.
+
+``index.query(queries, spec, metric=...)`` re-plans every call: route
+selection, companion resolution and — worse, on the sharded fabric —
+fresh engine shapes per batch mix, each one a jit recompilation.  The
+paper's whole premise (TrueKNN re-searching with a growing radius, RTNN
+batching against a fixed structure, Arkade reusing one L2 structure under
+many metric views) is that the *same* search runs repeatedly, so planning
+and compilation should be paid once:
+
+    plan = index.prepare(KnnSpec(8), metric="cosine")   # plan once
+    res_a = plan(batch_a)                               # execute many
+    res_b = plan(batch_b)
+    plan.explain()                                      # inspect the route
+
+A ``QueryPlan`` is a first-class callable:
+
+* **Plan tree.**  Construction runs ``repro.api.planner.build_plan`` —
+  route selection, metric-view resolution, fallback wiring, per-shard
+  children — with no query data.  ``explain()`` returns the structured
+  tree; its ``tag`` fields are the legacy ``result.timings["plan"]``
+  strings, so the old string surface is a rendering of this tree.
+* **Shape-bucketed executable cache.**  Each call pads the query count up
+  to a power of two (padding rows are copies of row 0, sliced off before
+  the caller sees the answer), and the plan's context makes the sharded
+  backend pad per-shard visit-sets to canonical pow2 subset shapes the
+  same way.  The jitted programs underneath therefore see a handful of
+  shapes however batches and shard mixes vary; ``cache_stats()`` reports
+  the bucket hit rate (a hit = this plan has already executed that shape,
+  i.e. the compiled executable is reused, no re-jit).
+* **Cross-plan warm-start state.**  The context carries a shared radius
+  seed: the sharded backend broadcasts one fused estimate to its children
+  (killing the duplicated per-shard ramp rounds) and publishes the
+  refined value back, so later plans on the same index start warm too.
+
+``index.query`` is now a thin wrapper: it builds a throwaway plan with
+``canonical_shapes=False`` (exact legacy shapes and counters) and calls
+it once — all existing callers keep working, answers are bit-identical to
+the prepared path.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.core.grid import _next_pow2
+from repro.core.result import slice_rows
+
+from .metrics import get_metric
+from .planner import build_plan, empty_result, run_plan
+from .query import QuerySpec
+
+__all__ = ["QueryPlan", "PlanContext"]
+
+
+class PlanContext:
+    """Execution context threaded through backend ``execute_*`` hooks.
+
+    One per ``QueryPlan``, shared across its executions — this is where
+    plan-scoped state that backends must see lives:
+
+    canonical_shapes: pad per-shard visit-sets (and any other
+        backend-internal batch subsets) to canonical pow2 shapes so the
+        compiled executables are reused across batch mixes.
+    warm_radius: shared warm-start radius seed in query-metric units
+        (written by backends as they refine it, broadcast by composite
+        backends to their children).
+    """
+
+    __slots__ = ("plan", "canonical_shapes", "warm_radius")
+
+    def __init__(self, plan: Optional["QueryPlan"] = None, *,
+                 canonical_shapes: bool = False,
+                 warm_radius: Optional[float] = None):
+        self.plan = plan
+        self.canonical_shapes = canonical_shapes
+        self.warm_radius = warm_radius
+
+    def record_bucket(self, key: tuple) -> bool:
+        """Count one executable-bucket use; returns True on a hit (this
+        plan has executed that shape before).  No-op without a plan."""
+        if self.plan is None:
+            return False
+        return self.plan._record_bucket(key)
+
+
+class QueryPlan:
+    """A prepared (spec, metric) search over one resident index.
+
+    Build with ``index.prepare(spec, metric=...)``; run with
+    ``plan(queries)`` (``queries=None`` keeps the dataset-queries-itself
+    meaning).  Answers are exactly what ``index.query`` returns for the
+    same arguments.
+    """
+
+    def __init__(self, index, spec: QuerySpec, metric: str = "l2", *,
+                 canonical_shapes: bool = True):
+        if not isinstance(spec, QuerySpec):
+            raise TypeError(
+                f"spec must be a QuerySpec (KnnSpec / RangeSpec / "
+                f"HybridSpec), got {type(spec).__name__}"
+            )
+        self.index = index
+        self.spec = spec
+        self.metric = get_metric(metric).name
+        self.canonical_shapes = bool(canonical_shapes)
+        self.root = build_plan(index, spec, self.metric)
+        self.ctx = PlanContext(self, canonical_shapes=self.canonical_shapes)
+        self._buckets: dict = {}  # bucket key -> execution count
+        self._hits = 0
+        self._misses = 0
+        self.executions = 0
+
+    # -- execution ---------------------------------------------------------
+
+    def __call__(self, queries):
+        """Execute the prepared plan; returns KNNResult or RangeResult."""
+        self.executions += 1
+        if queries is None:
+            # self-query: one fixed shape per index, nothing to pad
+            self._record_bucket(("self", self.index.n_points))
+            return run_plan(self.root, self.index, None, self.ctx)
+        q = np.asarray(queries, np.float32)
+        m = q.shape[0]
+        if m == 0:
+            return empty_result(self.index, self.spec, self.metric)
+        if not self.canonical_shapes:
+            self._record_bucket(("q", m))
+            return run_plan(self.root, self.index, q, self.ctx)
+        m_pad = _next_pow2(m)
+        self._record_bucket(("q", m_pad))
+        if m_pad > m:
+            # duplicate row 0: real queries to every engine (cheap, exact),
+            # sliced off below — rows are independent, answers unchanged
+            q = np.concatenate([q, np.repeat(q[:1], m_pad - m, axis=0)])
+        res = run_plan(self.root, self.index, q, self.ctx)
+        if m_pad > m:
+            res = slice_rows(res, m)
+            res.timings["padded_rows"] = m_pad - m
+        return res
+
+    # -- introspection -----------------------------------------------------
+
+    def explain(self) -> dict:
+        """Structured plan tree (route, metric view, fallbacks, per-shard
+        children); ``["tag"]`` renders the legacy plan-tag string."""
+        out = self.root.explain()
+        out["canonical_shapes"] = self.canonical_shapes
+        return out
+
+    def _record_bucket(self, key: tuple) -> bool:
+        seen = key in self._buckets
+        self._buckets[key] = self._buckets.get(key, 0) + 1
+        if seen:
+            self._hits += 1
+        else:
+            self._misses += 1
+        return seen
+
+    def cache_stats(self) -> dict:
+        """Executable-cache counters: a *bucket* is one engine shape this
+        plan has executed (top-level padded Q, per-shard padded subset);
+        a *hit* means that shape was reused — the jitted executable was
+        already compiled by this plan, no re-jit."""
+        looked = self._hits + self._misses
+        return {
+            "executions": self.executions,
+            "buckets": len(self._buckets),
+            "hits": self._hits,
+            "misses": self._misses,
+            "hit_rate": round(self._hits / looked, 4) if looked else 0.0,
+        }
+
+    def __repr__(self) -> str:
+        return (
+            f"QueryPlan({self.index.backend_name}, {self.spec}, "
+            f"metric={self.metric!r}, route={self.root.route!r}, "
+            f"executions={self.executions})"
+        )

@@ -1,12 +1,26 @@
 """The query planner: one routing layer between specs and backend engines.
 
-``NeighborIndex.query`` hands every call here.  The planner
+Since the QueryPlan redesign the planner is split into two phases:
 
-1. resolves the metric and validates the spec,
-2. routes native work to the backend's ``execute_*`` hook
+* **Plan construction** — :func:`build_plan` resolves the metric, validates
+  the spec and reifies the chosen route as a structured, inspectable
+  :class:`PlanNode` tree (route, metric view, fallbacks, per-shard
+  children).  Construction never touches query data; it is what
+  ``index.prepare(spec, metric=...)`` does once, up front.
+* **Plan execution** — :func:`run_plan` walks a constructed tree against a
+  concrete query batch, threading a ``PlanContext`` (``repro.api.plan``)
+  into every backend ``execute_*`` hook so prepared plans can canonicalize
+  shapes, count executable-cache buckets and broadcast warm-start state.
+
+:func:`execute` (the legacy one-shot entry ``index.query`` used to call
+directly) is now construct-then-run in one step.
+
+Routing rules (unchanged in substance):
+
+1. native work goes to the backend's ``execute_*`` hook
    (``execute_knn`` always exists; ``execute_range`` / ``execute_hybrid``
-   may raise ``NotImplementedError``),
-3. covers every gap with a *generic plan*, so a (spec, metric, backend)
+   and spec variants may be unsupported),
+2. every gap is covered by a *generic plan*, so a (spec, metric, backend)
    triple is never "unsupported", only "not yet fast":
 
    * knn variant the backend's engine rejects (``execute_knn`` raises
@@ -23,7 +37,9 @@
      metric-aware brute engine.
 
 Generic plans tag ``result.timings["plan"]`` so benchmarks and tests can
-see which path answered.  Native paths carry no tag (or "native").
+see which path answered.  Native paths carry no tag (or "native").  The
+same strings are the ``tag`` of each ``PlanNode`` (``plan.explain()``), so
+the structured tree renders the legacy tag for back-compat.
 
 The planner also owns the *shard-pruning* vocabulary of the composite
 ``sharded`` backend: :func:`shard_visit_mask` is THE radius-aware pruning
@@ -36,6 +52,9 @@ carries, so benchmarks and CI can assert pruning actually engaged.
 
 from __future__ import annotations
 
+import dataclasses
+import functools
+import inspect
 import time
 from typing import Callable, Optional
 
@@ -48,7 +67,11 @@ from .metrics import Metric, get_metric
 from .query import HybridSpec, KnnSpec, QuerySpec, RangeSpec
 
 __all__ = [
+    "PlanNode",
+    "build_plan",
+    "run_plan",
     "execute",
+    "empty_result",
     "apply_radius_cut",
     "range_from_counted_round",
     "range_via_counted_topk",
@@ -100,44 +123,259 @@ def apply_radius_cut(dists, idxs, cut: float, sentinel: int):
     )
 
 
-def execute(index, queries, spec: QuerySpec, metric_name: str):
-    """Plan and run ``spec`` on ``index``; returns KNNResult or RangeResult."""
+# -- phase 1: plan construction ---------------------------------------------
+
+
+@dataclasses.dataclass
+class PlanNode:
+    """One routing decision, reified.
+
+    A constructed plan is a tree of these: the root is the route chosen
+    for (backend, spec, metric); ``children`` are the routes it delegates
+    to (the companion search under an ``l2_view`` or ``knn_fallback``
+    node, the inner dispatch of a generic sweep/filter, the per-shard
+    child plans of a ``sharded`` node).  ``tag`` is the legacy
+    ``result.timings["plan"]`` string the route emits at execution time
+    (dynamic tags — the sharded pruning counts — keep their static prefix
+    here), so ``explain()`` renders exactly what the old string-tag
+    surface reported, plus the structure it flattened away.
+    """
+
+    route: str
+    backend: str
+    spec: QuerySpec
+    metric: str
+    tag: str
+    props: dict = dataclasses.field(default_factory=dict)
+    #: child PlanNodes, or a zero-arg thunk building them on first
+    #: explain() — composite backends defer per-shard children so the
+    #: throwaway plans behind one-shot ``index.query`` never pay for
+    #: introspection data nobody reads
+    children: object = dataclasses.field(default_factory=list)
+
+    def resolved_children(self) -> list:
+        if callable(self.children):
+            self.children = self.children()
+        return self.children
+
+    def explain(self) -> dict:
+        """Structured, JSON-serializable plan tree."""
+        spec_d = {"kind": self.spec.kind}
+        for f in dataclasses.fields(self.spec):
+            v = getattr(self.spec, f.name)
+            if v is not None:
+                spec_d[f.name] = v
+        out = {
+            "route": self.route,
+            "backend": self.backend,
+            "spec": spec_d,
+            "metric": self.metric,
+            "tag": self.tag,
+        }
+        if self.props:
+            out["props"] = dict(self.props)
+        out["children"] = [c.explain() for c in self.resolved_children()]
+        return out
+
+
+@functools.lru_cache(maxsize=None)
+def _hook_accepts_ctx(cls: type, kind: str) -> bool:
+    """Whether ``cls.execute_<kind>`` takes the plan-context argument
+    (third-party backends written against the pre-QueryPlan hook signature
+    keep working — they just don't see the context)."""
+    fn = getattr(cls, f"execute_{kind}", None)
+    if fn is None:
+        return False
+    try:
+        return "ctx" in inspect.signature(fn).parameters
+    except (TypeError, ValueError):  # pragma: no cover - exotic callables
+        return False
+
+
+def _has_native(index, kind: str) -> bool:
+    """Structural capability check: does the backend override the hook?"""
+    from .index import NeighborIndex
+
+    base = getattr(NeighborIndex, f"execute_{kind}")
+    return getattr(type(index), f"execute_{kind}", base) is not base
+
+
+def _native_node(index, spec, metric: Metric) -> PlanNode:
+    tag, props, children = index.plan_details(spec, metric)
+    return PlanNode(
+        route="native",
+        backend=index.backend_name,
+        spec=spec,
+        metric=metric.name,
+        tag=tag,
+        props=props,
+        children=children,
+    )
+
+
+def _build_dispatch(index, spec, metric: Metric) -> PlanNode:
+    """Route a native-metric spec: backend hook, or a generic plan."""
+    name = index.backend_name
+    if isinstance(spec, KnnSpec):
+        if index.supports_knn_spec(spec):
+            return _native_node(index, spec, metric)
+        view = getattr(index, "_knn_fallback_view", None)
+        child = (
+            build_plan(view, spec, metric.name)
+            if view is not None
+            else PlanNode("native", "trueknn", spec, metric.name, "native",
+                          props={"companion": "built lazily on first run"})
+        )
+        return PlanNode(
+            "knn_fallback", name, spec, metric.name, "knn_fallback",
+            props={"companion_backend": "trueknn"}, children=[child],
+        )
+    if isinstance(spec, RangeSpec):
+        if _has_native(index, "range"):
+            return _native_node(index, spec, metric)
+        maxn = spec.max_neighbors
+        cap = max(1, index.n_points)
+        k0 = min(max((maxn + 1) if maxn else 32, 2), cap)
+        return PlanNode(
+            "knn_sweep", name, spec, metric.name, "knn_sweep",
+            props={"initial_k": k0, "strategy": "double k until got < k"},
+            children=[_build_dispatch(index, HybridSpec(k0, spec.radius),
+                                      metric)],
+        )
+    if isinstance(spec, HybridSpec):
+        if _has_native(index, "hybrid"):
+            return _native_node(index, spec, metric)
+        return PlanNode(
+            "knn_filter", name, spec, metric.name, "knn_filter",
+            props={"cut": spec.radius},
+            children=[_build_dispatch(index, KnnSpec(spec.k), metric)],
+        )
+    raise TypeError(f"unknown QuerySpec kind: {type(spec).__name__}")
+
+
+def build_plan(index, spec: QuerySpec, metric_name: str) -> PlanNode:
+    """Construct the plan tree for (index, spec, metric) — no query data.
+
+    Raises the same errors the old per-call surface raised (unknown
+    metric, spec variants a route cannot serve), so ``prepare`` fails as
+    fast as ``query`` did.
+    """
     metric = get_metric(metric_name)
     spec.validate()
     if metric.name in index.native_metrics:
-        return _dispatch(index, queries, spec, metric)
+        return _build_dispatch(index, spec, metric)
     if metric.has_l2_view and _L2 in index.native_metrics:
-        return _via_l2_view(index, queries, spec, metric)
-    return _brute_plan(index, queries, spec, metric)
+        child = _build_dispatch(
+            index, _transform_spec(spec, metric), get_metric(_L2)
+        )
+        return PlanNode(
+            "l2_view", index.backend_name, spec, metric.name, "l2_view",
+            props={"transform": f"{metric.name} -> l2 (monotone)"},
+            children=[child],
+        )
+    if metric.kernel_name is None:
+        raise ValueError(
+            f"metric {metric.name!r} has neither a fused engine form nor an "
+            "L2 reduction; no backend can serve it"
+        )
+    if isinstance(spec, KnnSpec) and spec.stop_radius is not None:
+        raise ValueError(
+            f"stop_radius needs a radius-scheduled engine; backend "
+            f"{index.backend_name!r} serves metric {metric.name!r} through "
+            "the dense fallback — use HybridSpec for a radius cap"
+        )
+    return PlanNode(
+        "brute_metric", index.backend_name, spec, metric.name, "brute_metric",
+        props={"engine": "exact metric-aware dense"},
+    )
 
 
-def _dispatch(index, queries, spec, metric: Metric):
-    """Native hook, or generic plan where the hook is missing."""
-    if isinstance(spec, KnnSpec):
+# -- phase 2: plan execution -------------------------------------------------
+
+
+def _call_hook(index, kind: str, queries, spec, metric: Metric, ctx):
+    fn = getattr(index, f"execute_{kind}")
+    if _hook_accepts_ctx(type(index), kind):
+        return fn(queries, spec, metric, ctx=ctx)
+    return fn(queries, spec, metric)
+
+
+def run_plan(node: PlanNode, index, queries, ctx=None):
+    """Execute a constructed plan tree against a query batch."""
+    metric = get_metric(node.metric)
+    spec = node.spec
+    if node.route == "native":
         try:
-            return index.execute_knn(queries, spec, metric)
+            return _call_hook(index, spec.kind, queries, spec, metric, ctx)
         except NotImplementedError:
-            return _knn_via_fallback(index, queries, spec, metric)
+            # a backend declared structural support it cannot honor at run
+            # time (third-party hooks predating supports_knn_spec): cover
+            # with the matching generic plan, exactly as the old dispatcher
+            if isinstance(spec, KnnSpec):
+                return _knn_via_fallback(index, queries, spec, metric, ctx)
+            if isinstance(spec, RangeSpec):
+                return _range_via_knn(index, queries, spec, metric, ctx)
+            return _hybrid_via_knn(index, queries, spec, metric, ctx)
+    if node.route == "knn_fallback":
+        return _knn_via_fallback(index, queries, spec, metric, ctx)
+    if node.route == "knn_sweep":
+        return _range_via_knn(index, queries, spec, metric, ctx)
+    if node.route == "knn_filter":
+        return _hybrid_via_knn(index, queries, spec, metric, ctx)
+    if node.route == "l2_view":
+        return _via_l2_view(index, queries, spec, metric, ctx)
+    if node.route == "brute_metric":
+        return _brute_plan(index, queries, spec, metric, ctx)
+    raise ValueError(f"unknown plan route {node.route!r}")
+
+
+def execute(index, queries, spec: QuerySpec, metric_name: str, ctx=None):
+    """Plan and run ``spec`` on ``index``; returns KNNResult or RangeResult.
+
+    The legacy one-shot entry: construct-then-run.  ``index.query`` goes
+    through a throwaway ``QueryPlan`` that lands here; prepared plans call
+    :func:`run_plan` on their cached tree instead.
+    """
+    return run_plan(build_plan(index, spec, metric_name), index, queries, ctx)
+
+
+def empty_result(index, spec: QuerySpec, metric_name: str):
+    """Well-formed zero-query answer for any (spec, metric, backend).
+
+    A ``Q == 0`` batch never touches an engine (nothing to search, and the
+    kernels' chunk math assumes at least one row); every backend returns
+    this shape instead, tagged ``plan == "empty"``.
+    """
+    metric = get_metric(metric_name)
+    timings = {"plan": "empty", "query_seconds": 0.0}
     if isinstance(spec, RangeSpec):
-        try:
-            return index.execute_range(queries, spec, metric)
-        except NotImplementedError:
-            return _range_via_knn(index, queries, spec, metric)
-    if isinstance(spec, HybridSpec):
-        try:
-            return index.execute_hybrid(queries, spec, metric)
-        except NotImplementedError:
-            return _hybrid_via_knn(index, queries, spec, metric)
-    raise TypeError(f"unknown QuerySpec kind: {type(spec).__name__}")
+        return _empty_range(0, spec, index.backend_name, metric.name, timings)
+    return KNNResult(
+        dists=np.empty((0, spec.k), np.float32),
+        idxs=np.empty((0, spec.k), np.int32),
+        n_tests=0,
+        backend=index.backend_name,
+        metric=metric.name,
+        found=np.zeros((0,), np.int64),
+        timings=timings,
+    )
+
+
+def _dispatch(index, queries, spec, metric: Metric, ctx=None):
+    """Native hook, or generic plan where the hook is missing (inner
+    dispatch used by generic plans whose sub-spec is shaped at run time —
+    the sweep's growing k, the view's transformed spec)."""
+    return run_plan(_build_dispatch(index, spec, metric), index, queries, ctx)
 
 
 # -- generic plan: knn via a companion engine -------------------------------
 
 
-def _knn_via_fallback(index, queries, spec: KnnSpec, metric: Metric):
+def _knn_via_fallback(index, queries, spec: KnnSpec, metric: Metric,
+                      ctx=None):
     """Serve a ``KnnSpec`` variant the backend's own engine rejects
-    (``execute_knn`` raised ``NotImplementedError`` — e.g. ``stop_radius``
-    on the distributed backend, which has no radius schedule to stop).
+    (``supports_knn_spec`` said no — e.g. ``stop_radius`` on the
+    distributed backend, which has no radius schedule to stop).
 
     A cached companion ``trueknn`` index over the same resident cloud
     answers instead: it implements the full KnnSpec surface (radius
@@ -153,7 +391,7 @@ def _knn_via_fallback(index, queries, spec: KnnSpec, metric: Metric):
 
         view = TrueKNNIndex(index.points)
         index._knn_fallback_view = view
-    res = execute(view, queries, spec, metric.name)
+    res = execute(view, queries, spec, metric.name, ctx)
     res.backend = index.backend_name
     res.timings["plan"] = "knn_fallback"
     res.timings["query_seconds"] = time.perf_counter() - t0
@@ -163,8 +401,9 @@ def _knn_via_fallback(index, queries, spec: KnnSpec, metric: Metric):
 # -- generic plan: hybrid = knn then filter ---------------------------------
 
 
-def _hybrid_via_knn(index, queries, spec: HybridSpec, metric: Metric):
-    res = index.execute_knn(queries, KnnSpec(spec.k), metric)
+def _hybrid_via_knn(index, queries, spec: HybridSpec, metric: Metric,
+                    ctx=None):
+    res = _call_hook(index, "knn", queries, KnnSpec(spec.k), metric, ctx)
     res.dists, res.idxs, res.found = apply_radius_cut(
         res.dists, res.idxs, spec.radius, index.n_points
     )
@@ -218,7 +457,8 @@ def _csr_from_rows(rows_i, rows_d, spec, *, n_tests, backend, metric_name,
     )
 
 
-def _range_via_knn(index, queries, spec: RangeSpec, metric: Metric):
+def _range_via_knn(index, queries, spec: RangeSpec, metric: Metric,
+                   ctx=None):
     """Oversized-k sweep: run radius-capped kNN with growing k until every
     query's ball is provably exhausted (``got < k``) or its row cap is
     met.  Works on any backend that answers kNN — the completeness test
@@ -249,7 +489,7 @@ def _range_via_knn(index, queries, spec: RangeSpec, metric: Metric):
     while pending.size:
         sweeps += 1
         sub = None if self_query else q_all[pending]
-        res = _dispatch(index, sub, HybridSpec(k, spec.radius), metric)
+        res = _dispatch(index, sub, HybridSpec(k, spec.radius), metric, ctx)
         total_tests += int(res.n_tests)
         d = np.asarray(res.dists)
         ix = np.asarray(res.idxs)
@@ -408,7 +648,7 @@ def _transform_spec(spec, metric: Metric):
     raise TypeError(type(spec).__name__)
 
 
-def _via_l2_view(index, queries, spec, metric: Metric):
+def _via_l2_view(index, queries, spec, metric: Metric, ctx=None):
     """Serve a reducible metric through an L2 backend: search the companion
     index over the transformed cloud, map distances/radii back at the
     boundary.  Per-round telemetry (``rounds``) stays in engine (L2)
@@ -419,7 +659,9 @@ def _via_l2_view(index, queries, spec, metric: Metric):
         if queries is None
         else metric.transform_points(np.asarray(queries, np.float32))
     )
-    res = _dispatch(view, tq, _transform_spec(spec, metric), get_metric(_L2))
+    res = _dispatch(
+        view, tq, _transform_spec(spec, metric), get_metric(_L2), ctx
+    )
     back = metric.dist_from_l2
     res.metric = metric.name
     res.backend = index.backend_name
@@ -439,15 +681,12 @@ def _via_l2_view(index, queries, spec, metric: Metric):
 # -- generic plan: exact metric-aware brute engine --------------------------
 
 
-def _brute_plan(index, queries, spec, metric: Metric):
+def _brute_plan(index, queries, spec, metric: Metric, ctx=None):
     """Last-resort exact plan for metrics the backend can neither compute
     natively nor reach through an L2 reduction (L1/L∞ on grid engines):
-    the structure is bypassed, the metric-aware dense engines answer."""
-    if metric.kernel_name is None:
-        raise ValueError(
-            f"metric {metric.name!r} has neither a fused engine form nor an "
-            "L2 reduction; no backend can serve it"
-        )
+    the structure is bypassed, the metric-aware dense engines answer.
+    (``build_plan`` already rejected metrics with no engine form and
+    ``stop_radius`` specs, which this route cannot serve.)"""
     from repro.core.brute import brute_knn_engine
 
     if isinstance(spec, RangeSpec):
@@ -459,12 +698,6 @@ def _brute_plan(index, queries, spec, metric: Metric):
 
     t0 = time.perf_counter()
     k = spec.k
-    if isinstance(spec, KnnSpec) and spec.stop_radius is not None:
-        raise ValueError(
-            f"stop_radius needs a radius-scheduled engine; backend "
-            f"{index.backend_name!r} serves metric {metric.name!r} through "
-            "the dense fallback — use HybridSpec for a radius cap"
-        )
     d, i, n_tests = brute_knn_engine(
         index.points, k, queries=queries, metric=metric.kernel_name
     )

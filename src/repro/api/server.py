@@ -41,9 +41,15 @@ and request it provides:
   quantize each coordinate to ``cache_quant`` (default 1e-6): queries
   closer than the quantum collide and share an answer — set
   ``cache_size=0`` if even that is too much approximation.
+* **Prepared plans.**  Every (index, spec, metric) bucket is served
+  through a cached ``QueryPlan`` (``index.prepare``): route construction
+  and the shape-bucketed compiled executables amortize across that
+  tenant's batches.  ``server.prepare(spec, index=...)`` builds one up
+  front; ``server.active_plans()`` returns the structured plan trees;
+  per-bucket ``stats()`` carry the plan-cache hit/miss counters.
 * **Metering.**  Per (index, spec-kind, k, metric) bucket: request latency
-  p50/p99, throughput, batch-size histogram, cache hit rate, queue depth —
-  all through ``server.stats()``.
+  p50/p99, throughput, batch-size histogram, cache hit rate, plan-cache
+  hit/miss, queue depth — all through ``server.stats()``.
 
 Synchronous use (tests, notebooks)::
 
@@ -404,6 +410,13 @@ class NeighborServer:
         self._queues: "OrderedDict[tuple, deque]" = OrderedDict()
         self._meters: dict = {}  # (index_name, kind, k, metric) -> _Meter
         self._cache: "OrderedDict[tuple, tuple]" = OrderedDict()
+        # (index_name, spec, metric) -> prepared QueryPlan: batches are
+        # served through prepared plans, so route construction and the
+        # shape-bucketed compiled executables amortize per tenant bucket.
+        # LRU-bounded (MAX_PLANS): clients deriving a fresh radius per
+        # request mint unbounded distinct specs, and each plan holds a
+        # route tree + counters that must not accumulate forever.
+        self._plans: "OrderedDict[tuple, object]" = OrderedDict()
         self._worker: Optional[threading.Thread] = None
         self._stop = False
         self._submitted = 0
@@ -451,6 +464,8 @@ class NeighborServer:
                 raise ValueError(
                     f"index {name!r} has {pending} pending rows; drain first"
                 )
+            for key in [k for k in self._plans if k[0] == name]:
+                del self._plans[key]
             return self._indexes.pop(name)
 
     def _resolve_index(self, name: Optional[str]) -> str:
@@ -624,12 +639,34 @@ class NeighborServer:
         latency/throughput meters, and every resident index's own
         ``stats()`` under ``"indexes"``."""
         with self._lock:
-            buckets = {
-                f"{name}/{kind}/k={k}/{metric}": m.summary(
+            buckets = {}
+            for (name, kind, k, metric), m in self._meters.items():
+                summary = m.summary(
                     self._bucket_depth(name, kind, k, metric)
                 )
-                for (name, kind, k, metric), m in self._meters.items()
-            }
+                # executable-cache counters of the prepared plans serving
+                # this bucket (plans are keyed by full spec; a meter bucket
+                # aggregates every spec with the same kind/k/metric)
+                plans = [
+                    p for (nm, sp, me), p in self._plans.items()
+                    if nm == name and sp.kind == kind
+                    and getattr(sp, "k", None) == k and me == metric
+                ]
+                hits = sum(p.cache_stats()["hits"] for p in plans)
+                misses = sum(p.cache_stats()["misses"] for p in plans)
+                summary["plan_cache"] = {
+                    "plans": len(plans),
+                    "executable_buckets": sum(
+                        p.cache_stats()["buckets"] for p in plans
+                    ),
+                    "hits": hits,
+                    "misses": misses,
+                    "hit_rate": (
+                        round(hits / (hits + misses), 4)
+                        if (hits + misses) else 0.0
+                    ),
+                }
+                buckets[f"{name}/{kind}/k={k}/{metric}"] = summary
             hits = sum(m.cache_hits for m in self._meters.values())
             misses = sum(m.cache_misses for m in self._meters.values())
             return {
@@ -660,6 +697,51 @@ class NeighborServer:
                     name: idx.stats() for name, idx in self._indexes.items()
                 },
             }
+
+    # -- prepared plans ----------------------------------------------------
+
+    def prepare(self, spec: QuerySpec, *, metric: str = "l2",
+                index: Optional[str] = None):
+        """Prepare (and cache) the plan the server will serve ``spec``
+        with against the named tenant; returns the ``QueryPlan``.  Batches
+        for the same (index, spec, metric) bucket reuse it, so calling
+        this up front moves plan construction out of the first request's
+        latency.  ``plan.explain()`` shows the route."""
+        if not isinstance(spec, QuerySpec):
+            raise TypeError(
+                f"spec must be a QuerySpec, got {type(spec).__name__}"
+            )
+        spec.validate()
+        return self._plan_for(self._resolve_index(index), spec, metric)
+
+    def active_plans(self) -> dict:
+        """index name -> list of structured plan trees (``explain()``) for
+        every prepared (spec, metric) bucket currently cached."""
+        with self._lock:
+            out: dict = {}
+            for (name, _spec, _metric), plan in self._plans.items():
+                out.setdefault(name, []).append(plan.explain())
+            return out
+
+    #: LRU bound on cached prepared plans across all tenants
+    MAX_PLANS = 256
+
+    def _plan_for(self, name, spec, metric):
+        key = (name, spec, metric)
+        with self._lock:
+            plan = self._plans.get(key)
+            if plan is None:
+                # canonical shapes follow pad_pow2: the server already pads
+                # batches to pow2, so the plan's canonicalization is a
+                # no-op on the hot path unless padding was disabled
+                plan = self._indexes[name].prepare(
+                    spec, metric=metric, canonical_shapes=self.pad_pow2
+                )
+                self._plans[key] = plan
+                while len(self._plans) > self.MAX_PLANS:
+                    self._plans.popitem(last=False)
+            self._plans.move_to_end(key)
+            return plan
 
     # -- internals ---------------------------------------------------------
 
@@ -742,7 +824,6 @@ class NeighborServer:
         m = len(batch)
         if m == 0:
             return 0
-        index = self._indexes[name]
         rows = np.stack([row for (_, _, row) in batch])
         # RTNN batch reordering: Z-order-sort the coalesced rows so
         # spatially close queries sit together in the engine's tiles and
@@ -760,10 +841,11 @@ class NeighborServer:
             # pad with copies of row 0: every backend treats them as real
             # queries (cheap, exact), and they are sliced off below
             rows = np.concatenate([rows, np.repeat(rows[:1], m_pad - m, 0)])
+        plan = self._plan_for(name, spec, metric)
         t0 = time.perf_counter()
         try:
-            with self._serve_lock:  # one index.query in flight at a time
-                res = index.query(rows, spec, metric=metric)
+            with self._serve_lock:  # one plan execution in flight at a time
+                res = plan(rows)
         except BaseException as e:
             # fail every ticket in the batch rather than stranding waiters
             with self._lock:

@@ -21,6 +21,7 @@ from .fixed_radius import fixed_radius_knn, fixed_radius_round
 from .grid import Grid, build_grid
 from .partition import (
     Partition,
+    aabb_max_dists,
     aabb_min_dists,
     morton_codes,
     partition_points,
@@ -53,6 +54,7 @@ __all__ = [
     "partition_points",
     "morton_codes",
     "aabb_min_dists",
+    "aabb_max_dists",
     "KNNResult",
     "RangeResult",
     "merge_knn",

@@ -41,6 +41,7 @@ __all__ = [
     "partition_points",
     "morton_codes",
     "aabb_min_dists",
+    "aabb_max_dists",
 ]
 
 
@@ -230,6 +231,34 @@ def aabb_min_dists(aabbs, queries, metric: str = "l2") -> np.ndarray:
         return np.sum(e, axis=-1)
     if metric == "linf":
         return np.max(e, axis=-1)
+    raise ValueError(
+        f"no AABB bound for metric {metric!r} (l2/l1/linf only; reducible "
+        "metrics bound through their transformed cloud)"
+    )
+
+
+def aabb_max_dists(aabbs, queries, metric: str = "l2") -> np.ndarray:
+    """(Q, S) upper bounds on the distance from each query to anything in
+    each AABB (the farthest-corner distance) — the termination counterpart
+    of :func:`aabb_min_dists`: once a search radius exceeds every shard's
+    upper bound, the whole cloud has provably been covered.
+
+    Per axis the farthest box point sits at whichever face is farther
+    (``f = max(|q - lo|, |q - hi|)``); the bound is the metric's norm of
+    the farthest-corner vector.  Computed in float64; callers comparing
+    against float32 engine output should inflate slightly.
+    """
+    boxes = np.asarray(aabbs, np.float64)  # (S, 2, d)
+    q = np.asarray(queries, np.float64)  # (Q, d)
+    lo = boxes[None, :, 0, :]  # (1, S, d)
+    hi = boxes[None, :, 1, :]
+    f = np.maximum(np.abs(q[:, None, :] - lo), np.abs(q[:, None, :] - hi))
+    if metric == "l2":
+        return np.sqrt(np.sum(f * f, axis=-1))
+    if metric == "l1":
+        return np.sum(f, axis=-1)
+    if metric == "linf":
+        return np.max(f, axis=-1)
     raise ValueError(
         f"no AABB bound for metric {metric!r} (l2/l1/linf only; reducible "
         "metrics bound through their transformed cloud)"

@@ -29,6 +29,7 @@ __all__ = [
     "RoundStats",
     "merge_knn",
     "merge_range",
+    "slice_rows",
     "topk_merge_rows",
 ]
 
@@ -175,6 +176,30 @@ class RangeResult:
             dd[i, :m] = dst[:m]
             ii[i, :m] = idx[:m]
         return dd, ii
+
+
+def slice_rows(res, m: int):
+    """First ``m`` query rows of a result (row-padded batches strip their
+    padding here — prepared plans pad query counts to canonical shapes, the
+    sharded fabric pads per-shard visit-sets; both slice back before any
+    caller sees the answer).  Per-row arrays are sliced; batch-level
+    telemetry (``n_tests``, ``rounds``, ``timings``) is kept as-is — the
+    padded rows were real work the engines actually did."""
+    if isinstance(res, RangeResult):
+        nnz = int(res.offsets[m])
+        return dataclasses.replace(
+            res,
+            offsets=res.offsets[: m + 1],
+            idxs=res.idxs[:nnz],
+            dists=res.dists[:nnz],
+            truncated=None if res.truncated is None else res.truncated[:m],
+        )
+    return dataclasses.replace(
+        res,
+        dists=res.dists[:m],
+        idxs=res.idxs[:m],
+        found=None if res.found is None else res.found[:m],
+    )
 
 
 # -- first-class result merging (the ShardedIndex fabric) -------------------

@@ -190,6 +190,14 @@ def _run_knn(args):
         f"max_batch={args.batch_size} cache={args.cache_size} "
         f"max_queue={args.max_queue}"
     )
+    # prepare the serving plan up front (moves route construction out of
+    # the first request's latency); --explain prints the structured trees
+    server.prepare(spec, metric=args.metric, index=args.index)
+    if args.explain:
+        import json
+
+        print("active plan trees (per tenant):")
+        print(json.dumps(server.active_plans(), indent=2, default=str))
 
     if args.arrival == "closed":
         _closed_loop(server, spec, args, pts, rng)
@@ -203,7 +211,9 @@ def _run_knn(args):
             f"(mean {b['mean_batch_rows']} rows/batch, hist "
             f"{b['batch_size_hist']}), p50 {b['latency_p50_ms']} ms "
             f"p99 {b['latency_p99_ms']} ms, cache_hit_rate "
-            f"{b['cache_hit_rate']}, reordered {b['reordered_batches']}"
+            f"{b['cache_hit_rate']}, reordered {b['reordered_batches']}, "
+            f"plan_cache {b['plan_cache']['hits']}h/"
+            f"{b['plan_cache']['misses']}m"
         )
     if s["rejected"]:
         print(f"admission control shed {s['rejected']} requests")
@@ -254,6 +264,9 @@ def main():
                     help="open-loop offered load, requests/second")
     ap.add_argument("--cache-size", type=int, default=4096,
                     help="NeighborServer LRU result-cache rows (0 disables)")
+    ap.add_argument("--explain", action="store_true",
+                    help="print each tenant's active structured plan trees "
+                    "(plan.explain()) once at startup")
     args = ap.parse_args()
     if args.mode == "knn":
         _run_knn(args)

@@ -1,0 +1,355 @@
+"""QueryPlan surface tests: prepare/execute answer-identity with
+``index.query`` across the backend x metric x spec matrix, the structured
+``plan.explain()`` tree (and the one back-compat test that the legacy
+``timings["plan"]`` tag strings are still emitted), the shape-bucketed
+executable cache, empty (Q=0) batches on every backend, the sharded
+fabric's fused cross-shard warm-start seed, and the server's per-tenant
+prepared-plan cache."""
+
+import functools
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    HybridSpec,
+    KnnSpec,
+    NeighborServer,
+    QueryPlan,
+    RangeSpec,
+    build_index,
+    get_metric,
+)
+from repro.core import make_dataset
+
+BACKENDS = ["brute", "fixed_radius", "trueknn", "distributed", "sharded"]
+METRICS = ["l2", "l1", "linf", "cosine"]
+
+
+@functools.lru_cache(maxsize=None)
+def _cloud(n=300, nq=24, seed=6):
+    pts = make_dataset("porto", n, seed=seed)
+    qs = make_dataset("porto", nq, seed=seed + 5)
+    return pts, qs
+
+
+@functools.lru_cache(maxsize=None)
+def _radius(metric, k=4, pct=60.0):
+    pts, qs = _cloud()
+    D = get_metric(metric).pairwise(qs, pts)
+    return float(np.percentile(np.sort(D, 1)[:, k - 1], pct))
+
+
+def _build(backend, metric="l2"):
+    cfg = {}
+    if backend == "fixed_radius":
+        cfg["radius"] = _radius(metric, pct=95.0) * 2.0
+    if backend == "sharded":
+        cfg.update(n_shards=4, child_backend="brute")
+    return build_index(_cloud()[0], backend=backend, **cfg)
+
+
+def _assert_same(a, b):
+    if hasattr(a, "offsets"):  # RangeResult CSR
+        assert np.array_equal(a.offsets, b.offsets)
+        assert np.array_equal(a.dists, b.dists)
+        assert np.array_equal(a.idxs, b.idxs)
+        if a.truncated is None:
+            assert b.truncated is None
+        else:
+            assert np.array_equal(a.truncated, b.truncated)
+    else:
+        assert np.array_equal(a.dists, b.dists)
+        assert np.array_equal(a.idxs, b.idxs)
+
+
+# ---------------------------- prepared plans are answer-identical to query
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("metric", METRICS)
+def test_prepared_plan_matches_query_bit_identical(backend, metric):
+    """The acceptance property: ``index.prepare(spec)(queries)`` returns
+    bit-identical dists/idxs/CSR to ``index.query(queries, spec)`` for
+    every spec kind, on fresh equally-configured indexes (so warm-state
+    evolution can't hide a divergence)."""
+    pts, qs = _cloud()
+    k = 4
+    r = _radius(metric)
+    kspec = (
+        KnnSpec(k, start_radius=_radius(metric, pct=95.0) * 2.0)
+        if backend == "fixed_radius"
+        else KnnSpec(k)
+    )
+    for spec in (kspec, HybridSpec(k, r), RangeSpec(r, max_neighbors=6)):
+        via_query = _build(backend, metric).query(qs, spec, metric=metric)
+        plan = _build(backend, metric).prepare(spec, metric=metric)
+        via_plan = plan(qs)
+        _assert_same(via_query, via_plan)
+        # and the plan is reusable: a second execution answers the same
+        _assert_same(via_query, plan(qs))
+
+
+def test_prepared_plan_matches_query_on_self_queries():
+    for backend in ("brute", "trueknn", "sharded"):
+        a = _build(backend).query(None, KnnSpec(3))
+        b = _build(backend).prepare(KnnSpec(3))(None)
+        _assert_same(a, b)
+
+
+def test_prepared_plan_pads_and_slices_off_padding():
+    """Q is padded up to pow2 under a prepared plan; the caller-visible
+    answer keeps the submitted row count (and rows beyond it never leak)."""
+    pts, qs = _cloud()
+    plan = build_index(pts, backend="brute").prepare(KnnSpec(3))
+    res = plan(qs[:5])  # pads to 8
+    assert res.dists.shape == (5, 3)
+    assert res.timings["padded_rows"] == 3
+    rng = build_index(pts, backend="brute").prepare(RangeSpec(0.5))(qs[:5])
+    assert rng.n_queries == 5
+
+
+# ---------------------------------------------------- structured explain
+
+
+def test_explain_tree_structure():
+    pts, qs = _cloud()
+    tk = build_index(pts, backend="trueknn")
+    # native route
+    e = tk.prepare(KnnSpec(3)).explain()
+    assert e["route"] == "native" and e["backend"] == "trueknn"
+    assert e["spec"] == {"kind": "knn", "k": 3}
+    assert e["metric"] == "l2" and e["children"] == []
+    # metric view: the companion search is a child node in l2
+    e = tk.prepare(KnnSpec(3), metric="cosine").explain()
+    assert e["route"] == "l2_view" and e["metric"] == "cosine"
+    assert e["children"][0]["metric"] == "l2"
+    # generic sweep: the inner hybrid dispatch is a child node
+    e = build_index(pts, backend="distributed").prepare(
+        RangeSpec(0.5)
+    ).explain()
+    assert e["route"] == "knn_sweep"
+    assert e["children"][0]["spec"]["kind"] == "hybrid"
+    # hybrid without a native hook: knn_filter over the knn dispatch
+    e = build_index(pts, backend="distributed").prepare(
+        HybridSpec(3, 0.5)
+    ).explain()
+    assert e["route"] == "knn_filter"
+    assert e["children"][0]["spec"] == {"kind": "knn", "k": 3}
+
+
+def test_explain_sharded_has_per_shard_children():
+    shard = build_index(
+        _cloud()[0], backend="sharded", n_shards=5, child_backend="trueknn"
+    )
+    e = shard.prepare(KnnSpec(4)).explain()
+    assert e["route"] == "native"
+    assert e["props"]["n_shards"] == 5
+    assert len(e["children"]) == 5
+    assert [c["props"]["shard"] for c in e["children"]] == list(range(5))
+    assert all(c["backend"] == "trueknn" for c in e["children"])
+
+
+def test_legacy_plan_tag_strings_still_emitted():
+    """THE back-compat test: the structured tree renders the same tag the
+    executed result still carries in ``timings["plan"]`` — migrated
+    callers read ``explain()``, unmigrated ones keep their strings."""
+    pts, qs = _cloud()
+    tk = build_index(pts, backend="trueknn")
+    for spec, metric, want in (
+        (KnnSpec(3), "l1", "brute_metric"),
+        (KnnSpec(3), "cosine", "l2_view"),
+    ):
+        assert tk.query(qs, spec, metric=metric).timings["plan"] == want
+        assert tk.prepare(spec, metric=metric).explain()["tag"] == want
+    dist = build_index(pts, backend="distributed")
+    assert dist.query(qs, RangeSpec(0.5)).timings["plan"] == "knn_sweep"
+    assert dist.prepare(RangeSpec(0.5)).explain()["tag"] == "knn_sweep"
+    assert (
+        dist.query(qs, KnnSpec(3, stop_radius=0.4)).timings["plan"]
+        == "knn_fallback"
+    )
+    # the sharded tag is dynamic (per-call pruning counts): the tree keeps
+    # the static prefix, the result the exact legacy rendering
+    shard = _build("sharded")
+    res = shard.query(qs, HybridSpec(3, 0.05))
+    v, p = res.timings["shard_visits"], res.timings["shard_potential"]
+    assert res.timings["plan"] == f"sharded/pruned={p - v}-of-{p}"
+    assert shard.prepare(HybridSpec(3, 0.05)).explain()["tag"].startswith(
+        "sharded/pruned="
+    )
+
+
+# ------------------------------------------------- executable-cache buckets
+
+
+def test_executable_cache_reuses_shape_buckets():
+    pts, _ = _cloud()
+    rng = np.random.default_rng(3)
+    shard = build_index(
+        pts, backend="sharded", n_shards=4, child_backend="brute"
+    )
+    plan = shard.prepare(RangeSpec(_radius("l2")))
+    mixes = [
+        make_dataset("porto", 24, seed=100 + i).astype(np.float32)
+        for i in range(4)
+    ]
+    for m in mixes:  # warmup pass: populates the shape buckets
+        plan(m)
+    warm = plan.cache_stats()
+    for m in mixes:  # repeat pass with the same mixes: zero new buckets
+        plan(m)
+    stats = plan.cache_stats()
+    assert stats["buckets"] == warm["buckets"], "repeated mixes re-jitted"
+    assert stats["misses"] == warm["misses"]
+    assert stats["hits"] > warm["hits"]
+    for i in range(4):  # fresh mixes: canonical shapes keep the hit rate up
+        plan(
+            (pts[rng.integers(0, len(pts), 24)]
+             + rng.normal(scale=0.01, size=(24, 2))).astype(np.float32)
+        )
+    fresh = plan.cache_stats()
+    delta_hits = fresh["hits"] - stats["hits"]
+    delta_miss = fresh["misses"] - stats["misses"]
+    assert delta_hits / (delta_hits + delta_miss) >= 0.9
+    assert fresh["executions"] == 12
+
+
+def test_throwaway_query_plans_do_not_share_buckets():
+    """index.query builds a fresh legacy-shape plan per call — its bucket
+    counters never accumulate (that's what prepare is for)."""
+    pts, qs = _cloud()
+    index = build_index(pts, backend="brute")
+    index.query(qs, KnnSpec(3))
+    plan = index.prepare(KnnSpec(3), canonical_shapes=False)
+    assert plan.cache_stats()["executions"] == 0
+
+
+# --------------------------------------------------- empty (Q = 0) batches
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_empty_batch_returns_well_formed_results(backend):
+    index = _build(backend)
+    empty = np.empty((0, 2), np.float32)
+    kspec = (
+        KnnSpec(3, start_radius=1.0) if backend == "fixed_radius"
+        else KnnSpec(3)
+    )
+    for spec in (kspec, HybridSpec(3, 0.5)):
+        for res in (index.query(empty, spec),
+                    index.prepare(spec)(empty)):
+            assert res.dists.shape == (0, 3) and res.idxs.shape == (0, 3)
+            assert res.found.shape == (0,)
+            assert res.timings["plan"] == "empty"
+            assert res.backend == index.backend_name
+    for spec in (RangeSpec(0.5), RangeSpec(0.5, max_neighbors=2)):
+        for res in (index.query(empty, spec),
+                    index.prepare(spec)(empty)):
+            assert res.n_queries == 0
+            assert np.array_equal(res.offsets, [0])
+            assert len(res.idxs) == 0 and len(res.dists) == 0
+            if spec.max_neighbors:
+                assert res.truncated.shape == (0,)
+            else:
+                assert res.truncated is None
+
+
+def test_empty_batch_with_non_native_metric():
+    res = _build("trueknn").query(np.empty((0, 2), np.float32),
+                                  KnnSpec(2), metric="cosine")
+    assert res.dists.shape == (0, 2) and res.metric == "cosine"
+
+
+# ------------------------------------------- fused cross-shard warm start
+
+
+def test_sharded_knn_tests_track_the_monolith():
+    """The ROADMAP n_tests-parity item: shared-cut rounds + the fused seed
+    keep sharded kNN work within 1.2x of the monolithic trueknn index
+    (the bench asserts the same on the full bench dataset)."""
+    n, k, nq = 4000, 6, 128
+    pts = make_dataset("porto", n, seed=0)
+    rng = np.random.default_rng(1)
+    mono = build_index(pts, backend="trueknn")
+    shard = build_index(
+        pts, backend="sharded", n_shards=4, child_backend="trueknn"
+    )
+    ratios = []
+    for i in range(3):
+        qs = (
+            pts[rng.integers(0, n, nq)]
+            + rng.normal(scale=0.01, size=(nq, 2))
+        ).astype(np.float32)
+        a = mono.query(qs, KnnSpec(k))
+        b = shard.query(qs, KnnSpec(k))
+        assert np.array_equal(a.dists, b.dists)
+        assert np.array_equal(a.idxs, b.idxs)
+        ratios.append(b.n_tests / a.n_tests)
+    assert min(ratios) <= 1.2, ratios
+    assert shard.stats()["warm_seed"]["l2"] > 0  # fused seed learned
+    assert shard.stats()["prune_rate"] > 0  # pruning still engaged
+
+
+def test_fused_seed_crosses_plans_via_context():
+    pts, qs = _cloud()
+    shard = build_index(
+        pts, backend="sharded", n_shards=4, child_backend="trueknn"
+    )
+    plan = shard.prepare(KnnSpec(3))
+    assert plan.ctx.warm_radius is None
+    plan(qs)
+    assert plan.ctx.warm_radius is not None  # published by the fabric
+    # a later plan on the same index starts from the learned seed
+    e = shard.prepare(KnnSpec(3)).explain()
+    assert e["props"]["warm_seed"] == pytest.approx(plan.ctx.warm_radius)
+
+
+def test_sharded_start_radius_still_a_seed_under_plans():
+    pts, qs = _cloud()
+    shard = _build("sharded")
+    plain = shard.prepare(KnnSpec(3))(qs)
+    seeded = shard.prepare(KnnSpec(3, start_radius=1e-6))(qs)
+    _assert_same(plain, seeded)
+
+
+# ------------------------------------------------------ prepare validation
+
+
+def test_prepare_validates_like_query():
+    pts, qs = _cloud()
+    index = build_index(pts, backend="trueknn")
+    with pytest.raises(TypeError, match="QuerySpec"):
+        index.prepare("knn")
+    with pytest.raises(ValueError, match="unknown metric"):
+        index.prepare(KnnSpec(3), metric="hamming")
+    # stop_radius on a dense metric route fails at *prepare* time
+    with pytest.raises(ValueError, match="stop_radius"):
+        index.prepare(KnnSpec(3, stop_radius=1.0), metric="l1")
+    assert isinstance(index.prepare(KnnSpec(3)), QueryPlan)
+
+
+# ------------------------------------------------- server plan-cache seam
+
+
+def test_server_caches_plans_per_tenant_and_meters_them():
+    pts, qs = _cloud()
+    server = NeighborServer(
+        indexes={"a": _build("brute"), "b": _build("brute")}, cache_size=0
+    )
+    spec = KnnSpec(3)
+    direct = _build("brute").query(qs, spec)
+    for _ in range(3):
+        got = server.submit(qs, spec, index="a").result()
+    _assert_same(direct, got)
+    plans = server.active_plans()
+    assert set(plans) == {"a"} and len(plans["a"]) == 1
+    assert plans["a"][0]["route"] == "native"
+    bucket = server.stats()["buckets"]["a/knn/k=3/l2"]
+    assert bucket["plan_cache"]["plans"] == 1
+    assert bucket["plan_cache"]["hits"] >= 2  # repeat shapes reused
+    # prepare() pre-builds; remove_index drops the tenant's plans
+    server.prepare(spec, index="b")
+    assert "b" in server.active_plans()
+    server.remove_index("b")
+    assert "b" not in server.active_plans()

@@ -257,14 +257,17 @@ def test_metric_registry_pluggable_and_unknown_rejected():
     try:
         assert "test_scaled_l2" in available_metrics()
         pts, qs = _cloud()
-        res = build_index(pts, backend="trueknn").query(
-            qs, KnnSpec(3), metric="test_scaled_l2"
-        )
+        index = build_index(pts, backend="trueknn")
+        res = index.query(qs, KnnSpec(3), metric="test_scaled_l2")
         want = np.sort(_oracle("l2"), 1)[:, :3] * 2.0
         np.testing.assert_allclose(np.sort(res.dists, 1), want,
                                    rtol=TOL, atol=TOL)
         assert res.metric == "test_scaled_l2"
-        assert res.timings["plan"] == "l2_view"
+        explain = index.prepare(
+            KnnSpec(3), metric="test_scaled_l2"
+        ).explain()
+        assert explain["route"] == "l2_view"
+        assert explain["children"][0]["metric"] == "l2"
     finally:
         from repro.api.metrics import _METRICS
 
@@ -385,7 +388,7 @@ def test_trueknn_hybrid_searches_cap_exactly():
     r = _pick_radius(D, 5, pct=40.0)
     index = build_index(pts, backend="trueknn")
     res = index.query(qs, HybridSpec(5, r))
-    assert res.timings.get("plan", "native") == "native"
+    assert index.prepare(HybridSpec(5, r)).explain()["route"] == "native"
     radii = [rs.radius for rs in res.rounds]
     assert radii[-1] == pytest.approx(r)
     assert all(x <= r + 1e-9 for x in radii)
@@ -545,13 +548,19 @@ def test_stop_radius_rejected_where_meaningless():
         )
 
 
-def test_results_carry_metric_and_plan_tags():
+def test_results_carry_metric_and_plan_routes():
     pts, qs = _cloud()
     tk = build_index(pts, backend="trueknn")
     assert tk.query(qs, KnnSpec(3)).metric == "l2"
     assert tk.query(qs, KnnSpec(3), metric="l1").metric == "l1"
-    assert tk.query(qs, KnnSpec(3), metric="l1").timings["plan"] == "brute_metric"
-    assert tk.query(qs, KnnSpec(3), metric="cosine").timings["plan"] == "l2_view"
-    rng = build_index(pts, backend="distributed").query(qs, RangeSpec(0.5))
-    assert rng.timings["plan"] == "knn_sweep"
+    # routing is asserted structurally (plan.explain()); the legacy tag
+    # strings have their own back-compat test in tests/test_plan.py
+    assert tk.prepare(KnnSpec(3), metric="l1").explain()["route"] == "brute_metric"
+    assert tk.prepare(KnnSpec(3), metric="cosine").explain()["route"] == "l2_view"
+    dist = build_index(pts, backend="distributed")
+    rng = dist.query(qs, RangeSpec(0.5))
+    sweep = dist.prepare(RangeSpec(0.5)).explain()
+    assert sweep["route"] == "knn_sweep"
+    # the sweep's inner dispatch is itself part of the tree
+    assert sweep["children"][0]["spec"]["kind"] == "hybrid"
     assert isinstance(rng, RangeResult) and rng.metric == "l2"

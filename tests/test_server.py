@@ -287,8 +287,11 @@ def test_distributed_stop_radius_takes_planner_fallback():
     want = oracle.query(qs, KnnSpec(k, stop_radius=0.3))
 
     index = build_index(pts, backend="distributed")
+    assert (
+        index.prepare(KnnSpec(k, stop_radius=0.3)).explain()["route"]
+        == "knn_fallback"
+    )
     res = index.query(qs, KnnSpec(k, stop_radius=0.3))  # must not raise
-    assert res.timings["plan"] == "knn_fallback"
     assert res.backend == "distributed"
     # the companion-trueknn fallback answers with the full stop_radius
     # semantics: identical to a fresh trueknn index over the same cloud
@@ -306,6 +309,7 @@ def test_distributed_stop_radius_takes_planner_fallback():
 def test_distributed_plain_knn_still_native():
     pts = make_dataset("porto", 600, seed=9)
     index = build_index(pts, backend="distributed")
+    assert index.prepare(KnnSpec(4)).explain()["route"] == "native"
     res = index.query(pts[:32], KnnSpec(4))
     assert "plan" not in res.timings  # native path, no fallback tag
 
@@ -544,16 +548,16 @@ def test_remove_index_refuses_while_batch_is_in_flight():
     from under its own query call."""
     idx = build_index(PTS, backend="brute")
     server = NeighborServer(indexes={"x": idx}, cache_size=0)
-    orig = idx.query
-    seen = {}
+    orig = idx.execute_knn  # hook the engine: both query and prepared
+    seen = {}               # plans pass through it mid-batch
 
-    def query_and_try_remove(q, spec=None, **kw):
+    def knn_and_try_remove(q, spec, metric, ctx=None):
         with pytest.raises(ValueError, match="pending"):
             server.remove_index("x")
         seen["guarded"] = True
-        return orig(q, spec, **kw)
+        return orig(q, spec, metric, ctx=ctx)
 
-    idx.query = query_and_try_remove
+    idx.execute_knn = knn_and_try_remove
     res = server.submit(QS[:4], KnnSpec(3), index="x").result()
     assert seen["guarded"] and res.dists.shape == (4, 3)
     server.remove_index("x")  # drained: removal succeeds
@@ -565,10 +569,10 @@ def test_admission_control_counts_in_flight_rows_as_pending():
     gate to another max_batch of rows."""
     idx = build_index(PTS, backend="brute")
     server = NeighborServer(idx, cache_size=0, max_queue=8)
-    orig = idx.query
-    seen = {}
+    orig = idx.execute_knn  # hook the engine: both query and prepared
+    seen = {}               # plans pass through it mid-batch
 
-    def query_and_probe(q, spec=None, **kw):
+    def knn_and_probe(q, spec, metric, ctx=None):
         # mid-batch: 8 rows in flight, queue empty — a 4-row submit must
         # still be shed (8 + 4 > 8)
         shed = server.submit(QS[8:12], KnnSpec(3))
@@ -576,12 +580,12 @@ def test_admission_control_counts_in_flight_rows_as_pending():
         with pytest.raises(AdmissionError, match="8 rows pending"):
             shed.result()
         seen["probed"] = True
-        return orig(q, spec, **kw)
+        return orig(q, spec, metric, ctx=ctx)
 
-    idx.query = query_and_probe
+    idx.execute_knn = knn_and_probe
     ok = server.submit(QS[:8], KnnSpec(3))
     res = ok.result()
-    idx.query = orig
+    idx.execute_knn = orig
     assert seen["probed"] and res.dists.shape == (8, 3)
     assert server.stats()["rejected"] == 1
     # batch done: admissions resume

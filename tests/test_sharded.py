@@ -287,16 +287,21 @@ def test_sharded_self_query_excludes_self_like_monolithic():
 # -------------------------------------------------------------- pruning
 
 
-def test_sharded_prunes_and_tags_the_plan():
+def test_sharded_prunes_and_reports_structured_counters():
     shard = build_index(
         PTS, backend="sharded", n_shards=8, child_backend="brute"
     )
+    # the route is inspectable before any query runs: a native sharded
+    # node whose children are the per-shard plans
+    explain = shard.prepare(HybridSpec(4, 0.05)).explain()
+    assert explain["route"] == "native" and explain["backend"] == "sharded"
+    assert explain["tag"].startswith("sharded/pruned=")  # legacy rendering
+    assert explain["props"]["n_shards"] == 8
+    assert len(explain["children"]) == 8
     res = shard.query(QS, HybridSpec(4, 0.05))  # tight ball: heavy pruning
-    assert res.timings["plan"].startswith("sharded/pruned=")
     v, p = res.timings["shard_visits"], res.timings["shard_potential"]
     assert p == len(QS) * 8
     assert 0 < v < p  # pruned something, visited something
-    assert res.timings["plan"] == f"sharded/pruned={p - v}-of-{p}"
     s = shard.stats()
     assert s["shard_visits"] == v
     assert s["shard_visits_pruned"] == p - v
@@ -335,8 +340,9 @@ def test_sharded_stop_radius_takes_companion_trueknn_fallback():
     shard = build_index(
         PTS, backend="sharded", n_shards=4, child_backend="trueknn"
     )
+    plan = shard.prepare(KnnSpec(4, stop_radius=0.2))
+    assert plan.explain()["route"] == "knn_fallback"
     res = shard.query(QS, KnnSpec(4, stop_radius=0.2))
-    assert res.timings["plan"] == "knn_fallback"
     assert res.backend == "sharded"
     assert np.array_equal(res.dists, want.dists)
     assert np.array_equal(res.idxs, want.idxs)
