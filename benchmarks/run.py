@@ -23,6 +23,7 @@ def main() -> None:
         bench_index_reuse,
         bench_k,
         bench_kernel,
+        bench_mutation,
         bench_percentile,
         bench_plan_cache,
         bench_query_plans,
@@ -73,6 +74,11 @@ def main() -> None:
     with open("BENCH_plan_cache.json", "w") as f:
         json.dump(plan_cache_summary, f, indent=2, default=str)
     print("# wrote BENCH_plan_cache.json", flush=True)
+    _section("mutation (LSM composite: storm identity, sustained, delta tax)")
+    mutation_summary = bench_mutation.main()
+    with open("BENCH_mutation.json", "w") as f:
+        json.dump(mutation_summary, f, indent=2, default=str)
+    print("# wrote BENCH_mutation.json", flush=True)
     _section("kernel microbench")
     bench_kernel.main()
     print(f"# total {time.time()-t0:.1f}s", flush=True)

@@ -99,5 +99,28 @@ print(
     f"{plan.cache_stats()['misses']} misses over "
     f"{plan.cache_stats()['executions']} executions"
 )
+# -- mutation: insert/delete on the resident index ---------------------------
+# make_mutable adopts the already-built index as the base of an LSM
+# composite (no rebuild): writes land in brute delta shards, deletes
+# become tombstones, and answers stay bit-identical to a monolithic
+# rebuild over the live rows.  compact() folds the log back into the base.
+from repro.api import make_mutable  # noqa: E402
+
+mindex = make_mutable(index)
+new_ids = mindex.insert(pts[:64] + np.float32(0.01))   # minted stable ids
+mindex.delete(new_ids[:8])
+mres = mindex.query(qs, KnnSpec(k=5))
+st = mindex.stats()
+print(
+    f"mutable: +{len(new_ids)} rows, -8 (delta_rows={st['delta_rows']}, "
+    f"tombstones={st['tombstones']}), plan={mres.timings['plan']}"
+)
+mindex.compact()
+st = mindex.stats()
+print(
+    f"compacted: base_rows={st['base_rows']} delta_rows={st['delta_rows']} "
+    f"tombstones={st['tombstones']} (generation {mindex.generation})"
+)
+
 print(f"registered backends: {available_backends()}")
 print(f"registered metrics:  {available_metrics()}")

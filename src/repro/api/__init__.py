@@ -41,6 +41,13 @@ spatially-partitioned fabric (``repro.core.partition`` split, per-shard
 AABBs, radius-aware shard pruning, exact ``repro.core.result`` merges) —
 answers are bit-identical to the monolithic index, work is not.
 
+For mutation, ``backend="mutable"`` (or ``make_mutable(index)``, which
+adopts an already-built index with no rebuild) composes an immutable base
+with write-absorbing brute delta shards and a tombstone set:
+``index.insert(rows)`` / ``index.delete(ids)`` on a resident index, exact
+answers (bit-identical to a monolithic rebuild of the live rows), and
+policy-driven inline/background compaction — see ``repro.api.mutable``.
+
 For serving many clients, ``NeighborServer`` (``repro.api.server``)
 fronts a *named registry* of resident indexes with submit/poll ticket
 futures routed by index name, microbatching (pending requests coalesce
@@ -75,6 +82,7 @@ from .query import HybridSpec, KnnSpec, QuerySpec, RangeSpec
 
 from . import backends  # registers the built-in backends  # noqa: E402
 from .index import NeighborIndex, build_index
+from .mutable import CompactionPolicy, make_mutable, map_to_stable
 from .plan import PlanContext, QueryPlan
 from .registry import available_backends, get_backend, register_backend
 from .server import (
@@ -100,6 +108,9 @@ __all__ = [
     "normalize_rows",
     "NeighborIndex",
     "build_index",
+    "CompactionPolicy",
+    "make_mutable",
+    "map_to_stable",
     "QueryPlan",
     "PlanContext",
     "NeighborServer",

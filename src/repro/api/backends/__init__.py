@@ -10,6 +10,9 @@ Importing this package registers every built-in backend with the registry:
   sharded       spatially-partitioned composite of child indexes with
                 radius-aware shard pruning (RTNN-style search-space
                 restriction over any leaf backend)
+  mutable       LSM composite over any immutable base: insert/delete on a
+                resident index via brute delta shards + tombstones, with
+                policy-driven compaction (see ``repro.api.mutable``)
 
 Third-party backends register the same way — decorate a ``NeighborIndex``
 subclass with ``@register_backend("name")`` and import the module.
@@ -18,6 +21,7 @@ subclass with ``@register_backend("name")`` and import the module.
 from .brute import BruteIndex
 from .distributed import DistributedIndex
 from .fixed_radius import FixedRadiusIndex
+from .mutable import MutableIndex
 from .sharded import ShardedIndex
 from .trueknn import TrueKNNIndex
 
@@ -25,6 +29,7 @@ __all__ = [
     "BruteIndex",
     "DistributedIndex",
     "FixedRadiusIndex",
+    "MutableIndex",
     "ShardedIndex",
     "TrueKNNIndex",
 ]

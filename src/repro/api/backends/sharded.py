@@ -76,6 +76,8 @@ from repro.core.result import (
     merge_knn,
     merge_range,
     slice_rows,
+    strip_self_csr,
+    strip_self_knn,
     topk_merge_rows,
 )
 
@@ -389,39 +391,11 @@ class ShardedIndex(NeighborIndex):
             truncated=truncated,
         )
 
-    @staticmethod
-    def _strip_self_knn(d, i, self_ids, k: int, sentinel: int):
-        """Drop each row's own-index entry from a (Q, k+1) merged pool and
-        hand back the (Q, k) answer (padding keeps inf/sentinel form)."""
-        mask = i == self_ids[:, None]
-        order = np.argsort(mask, axis=1, kind="stable")  # self slots last
-        rows = np.arange(d.shape[0])[:, None]
-        d = d[rows, order]
-        i = i[rows, order]
-        moved = np.take_along_axis(mask, order, axis=1)
-        d = np.where(moved, np.inf, d)
-        i = np.where(moved, sentinel, i)
-        return d[:, :k], i[:, :k]
-
-    @staticmethod
-    def _strip_self_csr(part: RangeResult, self_ids) -> RangeResult:
-        rows = np.repeat(np.arange(part.n_queries), part.counts)
-        keep = part.idxs != self_ids[rows]
-        counts = np.bincount(
-            rows[keep], minlength=part.n_queries
-        ).astype(np.int64)
-        offsets = np.zeros((part.n_queries + 1,), np.int64)
-        np.cumsum(counts, out=offsets[1:])
-        return RangeResult(
-            offsets=offsets,
-            idxs=part.idxs[keep],
-            dists=part.dists[keep],
-            radius=part.radius,
-            n_tests=part.n_tests,
-            backend=part.backend,
-            metric=part.metric,
-            truncated=part.truncated,
-        )
+    # self-exclusion strippers now live in ``repro.core.result`` (shared
+    # with the mutable composite); kept as staticmethods for callers that
+    # reach them through the class
+    _strip_self_knn = staticmethod(strip_self_knn)
+    _strip_self_csr = staticmethod(strip_self_csr)
 
     def _account(self, q_total: int, visited: int, t0: float, res):
         from ..planner import shard_plan_tag

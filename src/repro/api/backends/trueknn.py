@@ -111,7 +111,13 @@ class TrueKNNIndex(NeighborIndex):
         self._warm_ema = float(warm_ema)
         self._max_cached_grids = max(1, int(max_cached_grids))
 
-        ext = (self._pts.max(0) - self._pts.min(0)).astype(np.float64)
+        if self.n_points:
+            ext = (self._pts.max(0) - self._pts.min(0)).astype(np.float64)
+        else:
+            # empty cloud: building must succeed (mutable composites hold
+            # empty bases; the planner answers queries with empty shapes
+            # before any engine runs), so the geometry degenerates to 0
+            ext = np.zeros((max(self.dim, 1),), np.float64)
         self._extent = float(ext.max())
         self._sq_diag = float(np.sum(ext * ext))  # max pairwise dist^2 bound
 

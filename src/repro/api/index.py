@@ -71,6 +71,7 @@ class NeighborIndex(abc.ABC):
         assert pts.ndim == 2, f"points must be (N, d), got {pts.shape}"
         self._pts = pts
         self._metric_views: dict = {}  # metric name -> companion index
+        self._generation = 0
 
     # -- introspection ----------------------------------------------------
 
@@ -87,6 +88,24 @@ class NeighborIndex(abc.ABC):
     def dim(self) -> int:
         return self._pts.shape[1]
 
+    @property
+    def generation(self) -> int:
+        """Monotone mutation counter: 0 for the life of an immutable
+        backend; the mutable composite bumps it on every insert / delete /
+        compaction.  ``QueryPlan`` captures it at prepare time and
+        transparently re-prepares when it has moved (see
+        ``repro.api.plan``), so no plan ever answers from pre-mutation
+        routing state."""
+        return self._generation
+
+    @property
+    def sentinel(self) -> int:
+        """The padding id in ``KNNResult.idxs`` (one past the largest
+        valid dataset id).  Equals ``n_points`` everywhere except the
+        mutable composite, whose results carry *stable* ids that survive
+        deletion."""
+        return self.n_points
+
     def __len__(self) -> int:
         return self.n_points
 
@@ -96,8 +115,30 @@ class NeighborIndex(abc.ABC):
             "backend": self.backend_name,
             "n_points": self.n_points,
             "dim": self.dim,
+            "generation": self.generation,
             "metric_views": sorted(self._metric_views),
         }
+
+    # -- mutation (mutable composite only) --------------------------------
+
+    def insert(self, points) -> np.ndarray:
+        """Add points to the resident cloud.  Immutable backends raise;
+        build with ``backend="mutable"`` (or wrap an existing index via
+        ``repro.api.mutable.make_mutable``) for streaming writes."""
+        raise NotImplementedError(
+            f"backend {self.backend_name!r} is immutable; build with "
+            "backend='mutable' or wrap it: "
+            "repro.api.mutable.make_mutable(index)"
+        )
+
+    def delete(self, ids) -> int:
+        """Remove points by dataset id.  Immutable backends raise; see
+        :meth:`insert`."""
+        raise NotImplementedError(
+            f"backend {self.backend_name!r} is immutable; build with "
+            "backend='mutable' or wrap it: "
+            "repro.api.mutable.make_mutable(index)"
+        )
 
     # -- the hot path -----------------------------------------------------
 

@@ -108,6 +108,10 @@ class QueryPlan:
         self.canonical_shapes = bool(canonical_shapes)
         self.root = build_plan(index, spec, self.metric)
         self.ctx = PlanContext(self, canonical_shapes=self.canonical_shapes)
+        #: index generation this plan's route tree was built against
+        self.generation = int(getattr(index, "generation", 0) or 0)
+        #: times the route tree was rebuilt because the index mutated
+        self.invalidations = 0
         self._buckets: dict = {}  # bucket key -> execution count
         self._hits = 0
         self._misses = 0
@@ -115,9 +119,36 @@ class QueryPlan:
 
     # -- execution ---------------------------------------------------------
 
+    def _check_generation(self) -> None:
+        """Staleness guard: a plan prepared against generation g must not
+        answer from its pre-mutation route tree once the index has moved
+        on (composite routes bake in child/shard structure; a compaction
+        replaces it wholesale).  The plan transparently re-prepares —
+        same spec, same metric, fresh routes — and counts the rebuild in
+        ``invalidations``.  Shape buckets are reset (the old routes'
+        executables are dead weight); cumulative hit/miss counters are
+        kept so serving meters stay monotone."""
+        gen = int(getattr(self.index, "generation", 0) or 0)
+        if gen != self.generation:
+            self.root = build_plan(self.index, self.spec, self.metric)
+            self.generation = gen
+            self.invalidations += 1
+            self._buckets.clear()
+
     def __call__(self, queries):
         """Execute the prepared plan; returns KNNResult or RangeResult."""
+        self._check_generation()
         self.executions += 1
+        if self.index.n_points == 0:
+            # empty resident cloud (a mutable index before its first
+            # insert, or drained by deletes): every engine assumes at
+            # least one point, so answer with well-formed empty shapes
+            # directly — Q rows of inf/sentinel (knn/hybrid) or empty
+            # CSR rows (range)
+            m = 0 if queries is None else np.asarray(queries).shape[0]
+            return empty_result(
+                self.index, self.spec, self.metric, q_total=m
+            )
         if queries is None:
             # self-query: one fixed shape per index, nothing to pad
             self._record_bucket(("self", self.index.n_points))
@@ -148,6 +179,7 @@ class QueryPlan:
         children); ``["tag"]`` renders the legacy plan-tag string."""
         out = self.root.explain()
         out["canonical_shapes"] = self.canonical_shapes
+        out["generation"] = self.generation
         return out
 
     def _record_bucket(self, key: tuple) -> bool:
@@ -171,6 +203,7 @@ class QueryPlan:
             "hits": self._hits,
             "misses": self._misses,
             "hit_rate": round(self._hits / looked, 4) if looked else 0.0,
+            "invalidations": self.invalidations,
         }
 
     def __repr__(self) -> str:

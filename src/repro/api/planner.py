@@ -339,24 +339,37 @@ def execute(index, queries, spec: QuerySpec, metric_name: str, ctx=None):
     return run_plan(build_plan(index, spec, metric_name), index, queries, ctx)
 
 
-def empty_result(index, spec: QuerySpec, metric_name: str):
-    """Well-formed zero-query answer for any (spec, metric, backend).
+def empty_result(index, spec: QuerySpec, metric_name: str, *,
+                 q_total: int = 0):
+    """Well-formed *no-candidates* answer for any (spec, metric, backend).
 
-    A ``Q == 0`` batch never touches an engine (nothing to search, and the
-    kernels' chunk math assumes at least one row); every backend returns
-    this shape instead, tagged ``plan == "empty"``.
+    Two cases share this shape, and neither may touch an engine (the
+    kernels' chunk math assumes at least one row on both sides):
+
+    * ``Q == 0`` batches (``q_total=0``, the default) — nothing to search;
+    * queries against an *empty index* (``index.n_points == 0`` — a
+      mutable index before its first insert, or drained by deletes) —
+      ``q_total`` rows of inf-dists/sentinel-idxs with ``found == 0``
+      (knn/hybrid), or ``q_total`` empty CSR rows (range).
+
+    Tagged ``plan == "empty"``.  The idx fill value is the index's
+    ``sentinel`` (== ``n_points`` everywhere but the mutable composite,
+    whose stable-id space outlives deletion).
     """
     metric = get_metric(metric_name)
+    q_total = int(q_total)
     timings = {"plan": "empty", "query_seconds": 0.0}
     if isinstance(spec, RangeSpec):
-        return _empty_range(0, spec, index.backend_name, metric.name, timings)
+        return _empty_range(q_total, spec, index.backend_name, metric.name,
+                            timings)
+    sentinel = int(getattr(index, "sentinel", index.n_points))
     return KNNResult(
-        dists=np.empty((0, spec.k), np.float32),
-        idxs=np.empty((0, spec.k), np.int32),
+        dists=np.full((q_total, spec.k), np.inf, np.float32),
+        idxs=np.full((q_total, spec.k), sentinel, np.int32),
         n_tests=0,
         backend=index.backend_name,
         metric=metric.name,
-        found=np.zeros((0,), np.int64),
+        found=np.zeros((q_total,), np.int64),
         timings=timings,
     )
 

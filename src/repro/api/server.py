@@ -100,6 +100,26 @@ __all__ = [
 DEFAULT_INDEX = "default"
 
 
+class _WriteSpec:
+    """Queue-key marker for write tickets (inserts/deletes).
+
+    Writes ride the same per-tenant queue fabric as reads — the key
+    ``(index_name, _WRITE, "-")`` is one more bucket, so ``_pick_queue``'s
+    oldest-head FIFO interleaves write batches with read batches in
+    arrival order, and all writes to a tenant share one queue (their
+    mutual order is preserved exactly).  Duck-types the two spec
+    attributes the meters read."""
+
+    kind = "write"
+    k = None
+
+    def __repr__(self):
+        return "<write>"
+
+
+_WRITE = _WriteSpec()
+
+
 class AdmissionError(RuntimeError):
     """A submit was shed by admission control (``max_queue`` exceeded)."""
 
@@ -423,6 +443,8 @@ class NeighborServer:
         self._served = 0
         self._rejected = 0
         self._inflight: dict = {}  # index_name -> rows popped, not yet served
+        # index_name -> {"inserts": rows, "deletes": rows, "write_ops": n}
+        self._tenant_writes: dict = {}
 
     # -- tenant registry ---------------------------------------------------
 
@@ -572,26 +594,96 @@ class NeighborServer:
             self._arrived.notify_all()
         return ticket
 
+    def submit_insert(self, rows, *, index: Optional[str] = None) -> Ticket:
+        """Enqueue an insert of ``rows`` ((d,) or (m, d)) against the
+        named resident index; returns a :class:`Ticket` whose ``result()``
+        is the minted stable ids ((m,) int64).  Writes share the tenant's
+        queue fabric, so they interleave with reads in arrival order —
+        every read submitted after this write's turn sees its effect.
+        They are exempt from ``max_queue`` shedding (dropping a write
+        loses data, dropping a read loses latency) but still count as
+        pending rows, so a write backlog applies backpressure to reads.
+        The tenant must be a mutable index (``backend="mutable"`` or
+        ``make_mutable``); immutable tenants fail the ticket with
+        ``NotImplementedError`` at apply time."""
+        name = self._resolve_index(index)
+        target = self._indexes[name]
+        rows = np.asarray(rows, np.float32)
+        if rows.ndim == 1:
+            rows = rows[None, :]
+        if rows.ndim != 2 or rows.shape[1] != target.dim:
+            raise ValueError(
+                f"insert rows must be (m, {target.dim}) or "
+                f"({target.dim},) for index {name!r}, got {rows.shape}"
+            )
+        if rows.shape[0] == 0:
+            raise ValueError("cannot submit an empty insert")
+        return self._submit_write(name, ("insert", rows), rows.shape[0])
+
+    def submit_delete(self, ids, *, index: Optional[str] = None) -> Ticket:
+        """Enqueue a delete of stable ``ids`` against the named resident
+        index; ``result()`` is the number of rows deleted.  Unknown or
+        already-deleted ids fail the ticket with ``KeyError``.  Same
+        queue/ordering/backpressure semantics as :meth:`submit_insert`."""
+        name = self._resolve_index(index)
+        ids = np.asarray(ids, np.int64).ravel()
+        if ids.size == 0:
+            raise ValueError("cannot submit an empty delete")
+        return self._submit_write(name, ("delete", ids), int(ids.size))
+
+    def _submit_write(self, name, op, n_rows: int) -> Ticket:
+        ticket = Ticket(self, _WRITE, "-", 1, index_name=name)
+        with self._lock:
+            if name not in self._indexes:
+                raise KeyError(
+                    f"unknown index {name!r}; registered: "
+                    f"{sorted(self._indexes)}"
+                )
+            meter = self._meter(name, _WRITE, "-")
+            meter.requests += 1
+            meter.rows += n_rows
+            self._submitted += 1
+            queue = self._queues.setdefault((name, _WRITE, "-"), deque())
+            queue.append((ticket, op, None))
+            self._arrived.notify_all()
+        return ticket
+
     def step(self) -> int:
         """Serve one microbatch from the (index, spec, metric) queue whose
         head request has waited longest (FIFO across buckets — no
-        starvation).  Returns the number of query rows served (0 = nothing
-        pending).  This is the whole serving engine; the worker thread
-        just loops it.
+        starvation).  Returns the number of query rows served (write
+        tickets count one row each; 0 = nothing pending).  This is the
+        whole serving engine; the worker thread just loops it.
         """
         with self._lock:
             key, queue = self._pick_queue()
             if key is None:
                 return 0
             name, spec, metric = key
+            is_write = isinstance(spec, _WriteSpec)
+            # Writes do not commute with reads: a read batch may coalesce
+            # only requests that arrived before the tenant's oldest pending
+            # write (and a write batch only ops older than its oldest
+            # pending read), so conflicting operations on a tenant are
+            # served in arrival order while read/read coalescing across a
+            # bucket stays unrestricted.  The popped head itself is the
+            # globally oldest request, so the batch is never empty.
+            barrier = float("inf")
+            for (nm, sp, _me), q in self._queues.items():
+                if nm == name and q and isinstance(sp, _WriteSpec) != is_write:
+                    barrier = min(barrier, q[0][0].submitted_at)
             batch = []
-            while queue and len(batch) < self.max_batch:
+            while queue and len(batch) < self.max_batch and (
+                not batch or queue[0][0].submitted_at < barrier
+            ):
                 batch.append(queue.popleft())
             if not queue:
                 self._queues.pop(key, None)
             # popped rows stay "pending" for remove_index until served
             self._inflight[name] = self._inflight.get(name, 0) + len(batch)
         try:
+            if isinstance(spec, _WriteSpec):
+                return self._run_writes(name, batch)
             return self._run_batch(name, spec, metric, batch)
         finally:
             with self._lock:
@@ -665,10 +757,20 @@ class NeighborServer:
                         round(hits / (hits + misses), 4)
                         if (hits + misses) else 0.0
                     ),
+                    "invalidations": sum(
+                        p.cache_stats()["invalidations"] for p in plans
+                    ),
                 }
                 buckets[f"{name}/{kind}/k={k}/{metric}"] = summary
             hits = sum(m.cache_hits for m in self._meters.values())
             misses = sum(m.cache_misses for m in self._meters.values())
+            plan_hits = plan_misses = plan_inval = n_plans = 0
+            for p in self._plans.values():
+                cs = p.cache_stats()
+                plan_hits += cs["hits"]
+                plan_misses += cs["misses"]
+                plan_inval += cs["invalidations"]
+                n_plans += 1
             return {
                 "submitted": self._submitted,
                 "served": self._served,
@@ -691,6 +793,19 @@ class NeighborServer:
                         round(hits / (hits + misses), 4)
                         if (hits + misses) else 0.0
                     ),
+                },
+                "plan_cache": {
+                    "plans": n_plans,
+                    "hits": plan_hits,
+                    "misses": plan_misses,
+                    "hit_rate": (
+                        round(plan_hits / (plan_hits + plan_misses), 4)
+                        if (plan_hits + plan_misses) else 0.0
+                    ),
+                    "invalidations": plan_inval,
+                },
+                "writes": {
+                    name: dict(w) for name, w in self._tenant_writes.items()
                 },
                 "buckets": buckets,
                 "indexes": {
@@ -817,6 +932,57 @@ class NeighborServer:
         self._cache.move_to_end(key)
         while len(self._cache) > self.cache_size:
             self._cache.popitem(last=False)
+
+    # write execution ---------------------------------------------------
+
+    def _cache_purge(self, name: str) -> None:
+        """Drop every cached result row of tenant ``name`` (caller holds
+        the lock): a mutation may change any answer, and a stale hit
+        would violate the read-your-writes ordering the write queue
+        provides."""
+        for key in [k for k in self._cache if k[0] == name]:
+            del self._cache[key]
+
+    def _run_writes(self, name, batch) -> int:
+        """Apply one batch of write tickets in submission order.  Each op
+        finalizes its ticket directly (there is no per-row assembly for a
+        write: the result is the mutation's own return value) and purges
+        the tenant's result cache before the next batch can serve a
+        read."""
+        index = self._indexes[name]
+        served = 0
+        for ticket, op, _ in batch:
+            kind, payload = op
+            try:
+                if kind == "insert":
+                    out = index.insert(payload)
+                    rows = int(np.asarray(payload).shape[0])
+                    counter = "inserts"
+                else:
+                    out = index.delete(payload)
+                    rows = int(np.asarray(payload).size)
+                    counter = "deletes"
+            except BaseException as e:
+                with self._lock:
+                    self._cache_purge(name)  # a partial apply still mutates
+                    self._fail(ticket, e)
+                served += 1
+                continue
+            with self._lock:
+                self._cache_purge(name)
+                w = self._tenant_writes.setdefault(
+                    name, {"inserts": 0, "deletes": 0, "write_ops": 0}
+                )
+                w[counter] += rows
+                w["write_ops"] += 1
+                ticket._result = out
+                self._served += 1
+                self._meter(name, ticket.spec, ticket.metric).latencies.append(
+                    time.perf_counter() - ticket.submitted_at
+                )
+                ticket._event.set()
+            served += 1
+        return served
 
     # batch execution --------------------------------------------------
 

@@ -141,6 +141,20 @@ def partition_points(points, n_shards: int, *, method: str = "morton") -> Partit
     """
     pts = np.asarray(points, np.float32)
     n, d = pts.shape
+    if n == 0:
+        # empty cloud: one empty shard with a degenerate AABB, so composite
+        # indexes can still be *built* empty (mutable bases start this way);
+        # the planner short-circuits queries before any pruning runs
+        if method not in ("morton", "grid"):
+            raise ValueError(
+                f"unknown partition method {method!r}; use 'morton' or 'grid'"
+            )
+        return Partition(
+            assign=np.empty((0,), np.int32),
+            shards=(np.empty((0,), np.int64),),
+            aabbs=np.zeros((1, 2, d), np.float32),
+            method=method,
+        )
     n_shards = max(1, min(int(n_shards), n))
     if method == "morton":
         order = np.argsort(morton_codes(pts), kind="stable")

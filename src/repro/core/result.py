@@ -14,6 +14,16 @@ monolithic one), and :func:`merge_range` folds per-shard CSR
 ``RangeResult`` parts keeping every row nearest-first and re-deriving the
 ``truncated`` flags.  Both accumulate ``n_tests`` (and ``rounds`` for
 knn) so the paper's work metric survives the split.
+
+Since the mutable-index subsystem, the folds are also *tombstone-aware*:
+``merge_knn(..., tombstones=ids)`` / ``merge_range(..., tombstones=ids)``
+mask deleted dataset ids out of every part BEFORE the top-k / row-cap
+truncation, so a base-index answer that surfaced since-deleted points
+still yields the exact k nearest *live* points (callers over-fetch each
+part by the tombstone count to guarantee enough live candidates survive
+the mask).  The self-exclusion strippers the sharded fabric introduced
+(:func:`strip_self_knn` / :func:`strip_self_csr`) live here too, shared
+by every composite backend.
 """
 
 from __future__ import annotations
@@ -27,9 +37,14 @@ __all__ = [
     "KNNResult",
     "RangeResult",
     "RoundStats",
+    "filter_csr",
+    "mask_tombstones",
+    "mask_tombstones_csr",
     "merge_knn",
     "merge_range",
     "slice_rows",
+    "strip_self_csr",
+    "strip_self_knn",
     "topk_merge_rows",
 ]
 
@@ -202,6 +217,84 @@ def slice_rows(res, m: int):
     )
 
 
+# -- tombstone masks and per-row filters (the mutable-index subsystem) ------
+
+
+def mask_tombstones(dists, idxs, tombstones, sentinel: int):
+    """Mask deleted dataset ids out of a (Q, k) candidate list.
+
+    Tombstoned slots become inf/sentinel — the same padding form every
+    engine emits — so a downstream top-k fold simply never picks them.
+    Applying this BEFORE truncation is what keeps a composite answer
+    exact: a part that over-fetched by the tombstone count still holds
+    the k nearest *live* candidates after the mask.  ``tombstones`` is an
+    array-like of dataset ids (empty = no-op); ``sentinel`` must not
+    itself be a tombstoned id.
+    """
+    dists = np.asarray(dists)
+    idxs = np.asarray(idxs)
+    tomb = np.asarray(tombstones, np.int64).ravel()
+    if tomb.size == 0:
+        return dists, idxs
+    dead = np.isin(idxs, tomb)
+    return (
+        np.where(dead, np.inf, dists).astype(np.float32),
+        np.where(dead, sentinel, idxs).astype(np.int32),
+    )
+
+
+def filter_csr(part: "RangeResult", keep: np.ndarray) -> "RangeResult":
+    """Drop CSR entries where ``keep`` ((nnz,) bool) is False, recomputing
+    offsets; per-row nearest-first order is preserved (boolean masking is
+    stable).  ``truncated`` flags are kept as-is — the caller decides what
+    a dropped entry means for them (over-fetched parts stay exact)."""
+    rows = np.repeat(np.arange(part.n_queries), part.counts)
+    counts = np.bincount(
+        rows[keep], minlength=part.n_queries
+    ).astype(np.int64)
+    offsets = np.zeros((part.n_queries + 1,), np.int64)
+    np.cumsum(counts, out=offsets[1:])
+    return dataclasses.replace(
+        part,
+        offsets=offsets,
+        idxs=part.idxs[keep],
+        dists=part.dists[keep],
+    )
+
+
+def mask_tombstones_csr(part: "RangeResult", tombstones) -> "RangeResult":
+    """Drop tombstoned dataset ids from a CSR range part (rows stay
+    nearest-first; ``truncated`` flags are preserved — a part that
+    over-fetched its row cap by the tombstone count keeps them exact)."""
+    tomb = np.asarray(tombstones, np.int64).ravel()
+    if tomb.size == 0 or len(part.idxs) == 0:
+        return part
+    return filter_csr(part, ~np.isin(part.idxs, tomb))
+
+
+def strip_self_knn(d, i, self_ids, k: int, sentinel: int):
+    """Drop each row's own-index entry from a (Q, k+1) merged pool and
+    hand back the (Q, k) answer (padding keeps inf/sentinel form) —
+    monolithic self-exclusion reproduced after a composite merge."""
+    mask = i == self_ids[:, None]
+    order = np.argsort(mask, axis=1, kind="stable")  # self slots last
+    rows = np.arange(d.shape[0])[:, None]
+    d = d[rows, order]
+    i = i[rows, order]
+    moved = np.take_along_axis(mask, order, axis=1)
+    d = np.where(moved, np.inf, d)
+    i = np.where(moved, sentinel, i)
+    return d[:, :k], i[:, :k]
+
+
+def strip_self_csr(part: "RangeResult", self_ids) -> "RangeResult":
+    """Drop each row's own-index entry from a CSR range part (see
+    :func:`strip_self_knn`; parts over-fetch one slot so the strip never
+    loses a real neighbor)."""
+    rows = np.repeat(np.arange(part.n_queries), part.counts)
+    return filter_csr(part, part.idxs != np.asarray(self_ids)[rows])
+
+
 # -- first-class result merging (the ShardedIndex fabric) -------------------
 
 
@@ -229,6 +322,7 @@ def merge_knn(
     backend: str = "",
     metric: str = "l2",
     timings: Optional[dict] = None,
+    tombstones=None,
 ) -> "KNNResult":
     """Fold per-shard ``KNNResult`` parts into one exact (Q, k) answer.
 
@@ -242,13 +336,23 @@ def merge_knn(
     counts that are *capped* per part (a child's top-k cut) do not, and
     callers should derive their own (the sharded backend reports the
     returned-neighbor count instead).
+
+    ``tombstones`` (dataset ids) are masked out of every part BEFORE the
+    top-k fold truncates, so the answer is the exact k nearest *live*
+    candidates — provided each part over-fetched by its tombstone count
+    (the mutable backend's contract).  The fold is associative and
+    commutative under the mask (masking is idempotent and per-slot), so
+    fold order over [base, delta1, delta2, ...] never changes answers.
     """
     assert parts, "merge_knn needs at least one part"
     q_total = np.asarray(parts[0].dists).shape[0]
     d = np.full((q_total, k), np.inf, np.float32)
     i = np.full((q_total, k), sentinel, np.int32)
     for p in parts:
-        d, i = topk_merge_rows(d, i, p.dists, p.idxs, k)
+        pd, pi = p.dists, p.idxs
+        if tombstones is not None:
+            pd, pi = mask_tombstones(pd, pi, tombstones, sentinel)
+        d, i = topk_merge_rows(d, i, pd, pi, k)
     found = None
     if all(p.found is not None for p in parts):
         found = np.sum([np.asarray(p.found, np.int64) for p in parts], axis=0)
@@ -276,6 +380,7 @@ def merge_range(
     backend: str = "",
     metric: str = "l2",
     timings: Optional[dict] = None,
+    tombstones=None,
 ) -> "RangeResult":
     """Fold per-shard CSR ``RangeResult`` parts into one exact answer.
 
@@ -285,8 +390,17 @@ def merge_range(
     re-truncates each merged row to the nearest m, and the merged
     ``truncated`` flag is exact: a row is truncated iff any part already
     was (its shard alone holds more than m) or the merged row overflows m.
+
+    ``tombstones`` (dataset ids) are dropped from every part BEFORE rows
+    are re-truncated at ``max_neighbors``: a part whose row cap was
+    over-fetched by its tombstone count (the mutable backend's contract)
+    still surfaces the nearest m live neighbors, and its ``truncated``
+    flags stay exact (a part capped at m + tombs holds > m live entries
+    whenever its flag is set).
     """
     assert parts, "merge_range needs at least one part"
+    if tombstones is not None:
+        parts = [mask_tombstones_csr(p, tombstones) for p in parts]
     q_total = parts[0].n_queries
     rows = np.concatenate(
         [np.repeat(np.arange(q_total), p.counts) for p in parts]

@@ -20,11 +20,19 @@ or neighbor-search serving through the ``NeighborServer`` front-end.
     # fixed-size batch in flight at a time
     PYTHONPATH=src python -m repro.launch.serve --mode knn \
         --arrival closed --batches 6 --batch-size 512
+
+    # mutating tenant: a Poisson write stream (--mutate writes/second of
+    # inserts and deletes through the server's write queue) interleaves
+    # with the read loop; the loop runs twice — compaction on, then off —
+    # and reports read p99 for each
+    PYTHONPATH=src python -m repro.launch.serve --mode knn \
+        --arrival open --rate 500 --mutate 50
 """
 
 from __future__ import annotations
 
 import argparse
+import threading
 import time
 
 import numpy as np
@@ -155,6 +163,102 @@ def dropped_counts_row(res) -> int:
     return dropped_counts(res.dists)[0]
 
 
+def _poisson_writer(server, args, pts, rng, stop, tenant, counts):
+    """Poisson write stream: inserts of small row batches sampled near the
+    dataset, with occasional deletes of ids this stream minted earlier.
+    Writes go through the server's write queue, so they interleave with
+    reads in arrival order (every read sees the writes that beat it in)."""
+    d = pts.shape[1]
+    pool: list = []
+    while not stop.is_set():
+        if stop.wait(rng.exponential(1.0 / args.mutate)):
+            return
+        try:
+            if pool and rng.random() < 0.25:
+                take = int(min(len(pool), 1 + rng.integers(0, 8)))
+                sel = sorted(
+                    map(int, rng.choice(len(pool), size=take, replace=False)),
+                    reverse=True,
+                )
+                ids = [pool.pop(i) for i in sel]
+                server.submit_delete(ids, index=tenant).result(timeout=120)
+                counts["deletes"] += take
+            else:
+                m = 8
+                rows = (
+                    pts[rng.integers(0, len(pts), m)]
+                    + rng.normal(scale=0.05, size=(m, d))
+                ).astype(np.float32)
+                minted = server.submit_insert(rows, index=tenant).result(
+                    timeout=120
+                )
+                pool.extend(int(i) for i in minted)
+                counts["inserts"] += m
+        except Exception:  # keep the stream alive; totals tell the story
+            counts["errors"] += 1
+
+
+def _run_mutating(base, spec, args, pts, rng):
+    """Serve the read loop twice under the Poisson write stream — once
+    with background compaction, once with compaction off — and report
+    read p99 for each: what a read pays for riding an ever-growing delta
+    log vs what it pays for sharing the tenant with rebuilds."""
+    from repro.api import NeighborServer, make_mutable
+
+    p99 = {}
+    for mode in ("background", "off"):
+        index = make_mutable(
+            base, delta_rows=max(512, args.n // 50), auto_compact=mode
+        )
+        server = NeighborServer(
+            indexes={args.index: index},
+            max_batch=args.batch_size,
+            cache_size=args.cache_size,
+            max_queue=args.max_queue,
+        )
+        server.prepare(spec, metric=args.metric, index=args.index)
+        print(
+            f"serving ({args.arrival} loop) with --mutate "
+            f"{args.mutate:.0f} writes/s, auto_compact={mode!r}"
+        )
+        stop = threading.Event()
+        counts = {"inserts": 0, "deletes": 0, "errors": 0}
+        writer = threading.Thread(
+            target=_poisson_writer,
+            args=(server, args, pts, np.random.default_rng(7), stop,
+                  args.index, counts),
+            daemon=True,
+        )
+        writer.start()
+        try:
+            if args.arrival == "closed":
+                _closed_loop(server, spec, args, pts, rng)
+            else:
+                _open_loop(server, spec, args, pts, rng)
+        finally:
+            stop.set()
+            writer.join()
+        s = server.stats()
+        read_p99 = [
+            b["latency_p99_ms"]
+            for key, b in s["buckets"].items()
+            if "/write/" not in key and b["latency_p99_ms"] is not None
+        ]
+        p99[mode] = max(read_p99) if read_p99 else None
+        st = s["indexes"][args.index]
+        print(
+            f"  writes: +{counts['inserts']} rows, -{counts['deletes']} rows "
+            f"({counts['errors']} errors); index: base={st['base_rows']} "
+            f"delta={st['delta_rows']} tombstones={st['tombstones']} "
+            f"compactions={st['compactions']}; read p99 {p99[mode]} ms"
+        )
+    if all(v is not None for v in p99.values()):
+        print(
+            f"read p99: {p99['background']} ms with compaction vs "
+            f"{p99['off']} ms without"
+        )
+
+
 def _run_knn(args):
     from repro.api import KnnSpec, NeighborServer, build_index
     from repro.core import make_dataset
@@ -179,6 +283,9 @@ def _run_knn(args):
         metric=args.metric,
     )
     spec = _make_spec(args, warm.dists, index)
+    if args.mutate > 0:
+        _run_mutating(index, spec, args, pts, rng)
+        return
     server = NeighborServer(
         indexes={args.index: index},
         max_batch=args.batch_size,
@@ -262,6 +369,11 @@ def main():
     )
     ap.add_argument("--rate", type=float, default=500.0,
                     help="open-loop offered load, requests/second")
+    ap.add_argument("--mutate", type=float, default=0.0,
+                    help="Poisson write stream, writes/second: wraps the "
+                    "index with make_mutable and runs the read loop twice "
+                    "(background compaction, then off), reporting read p99 "
+                    "for each")
     ap.add_argument("--cache-size", type=int, default=4096,
                     help="NeighborServer LRU result-cache rows (0 disables)")
     ap.add_argument("--explain", action="store_true",

@@ -9,6 +9,30 @@ it.  CI installs the real library, so this path only engages locally.
 import sys
 import types
 
+# A full-suite run accumulates thousands of jitted executables; on
+# single-core CPU hosts the XLA compiler reliably segfaults partway
+# through the suite once enough compiled state has piled up (the same
+# tests pass in isolation).  Dropping jax's compilation caches every few
+# dozen tests keeps the process below that cliff at the cost of some
+# recompiles.
+_CLEAR_CACHES_EVERY = 40
+_test_count = {"n": 0}
+
+
+def pytest_runtest_teardown(item, nextitem):
+    _test_count["n"] += 1
+    if _test_count["n"] % _CLEAR_CACHES_EVERY == 0:
+        import gc
+
+        try:
+            import jax
+
+            jax.clear_caches()
+        except Exception:
+            pass
+        gc.collect()
+
+
 try:
     import hypothesis  # noqa: F401
 except ModuleNotFoundError:

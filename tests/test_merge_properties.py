@@ -1,0 +1,264 @@
+"""Property tests: the merge_knn / merge_range fold algebra.
+
+The mutable composite's exactness rests on algebraic facts about the
+result folds, asserted here over randomized candidate pools with forced
+distance ties and tombstone masks:
+
+* the folds are **commutative** (any permutation of [base, delta1, ...]
+  gives the same answer) and **associative** (pre-merging a prefix then
+  folding the rest changes nothing),
+* tombstones masked **before** truncation make the fold equal to the
+  brute-force oracle over the union of the parts' candidates with dead
+  ids dropped — the property that keeps a composite answer exact when
+  parts over-fetch by the tombstone count.
+
+Distances are quantized to a few levels so ties across parts are common:
+the tie-break (ascending dataset id, matching ``lax.top_k``) is exactly
+what makes fold order irrelevant, so these tests would catch any merge
+that sorted by distance alone.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.result import (
+    KNNResult,
+    RangeResult,
+    merge_knn,
+    merge_range,
+)
+
+
+def _knn_parts(rng, q, n_ids, n_parts, tie_levels):
+    """Random (Q, w_p) candidate parts over a partition of ids 0..n_ids-1
+    (each id owned by one part, as composite sources partition the cloud),
+    rows sorted (dist, id) ascending with inf/sentinel padding."""
+    owner = rng.integers(0, n_parts, n_ids)
+    parts = []
+    for p in range(n_parts):
+        ids = np.flatnonzero(owner == p)
+        width = max(1, ids.size)
+        d = np.full((q, width), np.inf, np.float32)
+        i = np.full((q, width), n_ids, np.int32)
+        for row in range(q):
+            take = ids[rng.random(ids.size) < 0.8]
+            dist = (
+                rng.integers(0, tie_levels, take.size) / tie_levels
+            ).astype(np.float32)
+            order = np.lexsort((take, dist))
+            d[row, : take.size] = dist[order]
+            i[row, : take.size] = take[order]
+        parts.append(KNNResult(dists=d, idxs=i, n_tests=0))
+    return parts
+
+
+def _knn_oracle(parts, k, n_ids, tombs):
+    """k nearest live candidates of the union, (dist, id)-lexsorted,
+    inf/sentinel padded."""
+    q = parts[0].dists.shape[0]
+    d = np.concatenate([p.dists for p in parts], axis=1)
+    i = np.concatenate([p.idxs for p in parts], axis=1)
+    if d.shape[1] < k:  # pool narrower than k: pad like the fold does
+        pad = k - d.shape[1]
+        d = np.concatenate([d, np.full((q, pad), np.inf, d.dtype)], axis=1)
+        i = np.concatenate([i, np.full((q, pad), n_ids, i.dtype)], axis=1)
+    if tombs.size:
+        dead = np.isin(i, tombs)
+        d = np.where(dead, np.inf, d)
+        i = np.where(dead, n_ids, i)
+    order = np.lexsort((i, d), axis=-1)[:, :k]
+    rows = np.arange(q)[:, None]
+    d, i = d[rows, order], i[rows, order]
+    pad = ~np.isfinite(d)
+    return d, np.where(pad, n_ids, i)
+
+
+def _range_parts(rng, q, n_ids, n_parts, tie_levels, radius):
+    """CSR parts over an id partition; every in-ball candidate present
+    (uncapped), rows (dist, id)-lexsorted nearest-first."""
+    owner = rng.integers(0, n_parts, n_ids)
+    parts = []
+    for p in range(n_parts):
+        ids = np.flatnonzero(owner == p)
+        offsets = np.zeros((q + 1,), np.int64)
+        all_i, all_d = [], []
+        for row in range(q):
+            take = ids[rng.random(ids.size) < 0.7]
+            dist = (
+                rng.integers(0, tie_levels, take.size) / tie_levels
+            ).astype(np.float32) * radius
+            order = np.lexsort((take, dist))
+            all_i.append(take[order].astype(np.int32))
+            all_d.append(dist[order])
+            offsets[row + 1] = offsets[row] + take.size
+        parts.append(
+            RangeResult(
+                offsets=offsets,
+                idxs=(
+                    np.concatenate(all_i)
+                    if all_i else np.empty((0,), np.int32)
+                ),
+                dists=(
+                    np.concatenate(all_d)
+                    if all_d else np.empty((0,), np.float32)
+                ),
+                radius=radius,
+            )
+        )
+    return parts
+
+
+def _range_rows(res):
+    """[(idxs, dists) per row] for order-aware comparison."""
+    return [
+        (
+            res.idxs[res.offsets[r]: res.offsets[r + 1]].tolist(),
+            res.dists[res.offsets[r]: res.offsets[r + 1]].tolist(),
+        )
+        for r in range(res.n_queries)
+    ]
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    q=st.integers(1, 4),
+    n_ids=st.integers(2, 24),
+    n_parts=st.integers(1, 4),
+    k=st.integers(1, 9),
+    tie_levels=st.integers(1, 4),
+    tomb_frac=st.floats(0.0, 0.5),
+)
+def test_merge_knn_permutation_associativity_oracle(
+    seed, q, n_ids, n_parts, k, tie_levels, tomb_frac
+):
+    rng = np.random.default_rng(seed)
+    parts = _knn_parts(rng, q, n_ids, n_parts, tie_levels)
+    n_tombs = int(tomb_frac * n_ids)
+    tombs = rng.choice(n_ids, size=n_tombs, replace=False).astype(np.int64)
+    kw = dict(k=k, sentinel=n_ids, tombstones=tombs if n_tombs else None)
+
+    ref = merge_knn(parts, **kw)
+
+    # oracle: k nearest live candidates of the union
+    od, oi = _knn_oracle(parts, k, n_ids, tombs)
+    assert np.array_equal(ref.dists, od)
+    assert np.array_equal(ref.idxs, oi)
+
+    # commutativity: any fold order gives the identical answer
+    perm = rng.permutation(len(parts))
+    shuffled = merge_knn([parts[j] for j in perm], **kw)
+    assert np.array_equal(ref.dists, shuffled.dists)
+    assert np.array_equal(ref.idxs, shuffled.idxs)
+
+    # associativity: pre-merge a prefix, then fold the rest
+    if len(parts) > 1:
+        cut = 1 + int(rng.integers(0, len(parts) - 1))
+        pre = merge_knn(parts[:cut], **kw)
+        nested = merge_knn([pre] + parts[cut:], **kw)
+        assert np.array_equal(ref.dists, nested.dists)
+        assert np.array_equal(ref.idxs, nested.idxs)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    q=st.integers(1, 4),
+    n_ids=st.integers(2, 24),
+    n_parts=st.integers(1, 4),
+    tie_levels=st.integers(1, 4),
+    tomb_frac=st.floats(0.0, 0.5),
+    cap=st.integers(1, 8),
+    use_cap=st.booleans(),
+)
+def test_merge_range_permutation_associativity_oracle(
+    seed, q, n_ids, n_parts, tie_levels, tomb_frac, cap, use_cap
+):
+    rng = np.random.default_rng(seed)
+    radius = 1.0
+    parts = _range_parts(rng, q, n_ids, n_parts, tie_levels, radius)
+    n_tombs = int(tomb_frac * n_ids)
+    tombs = rng.choice(n_ids, size=n_tombs, replace=False).astype(np.int64)
+    m = cap if use_cap else None
+    kw = dict(
+        radius=radius,
+        max_neighbors=m,
+        tombstones=tombs if n_tombs else None,
+    )
+
+    ref = merge_range(parts, **kw)
+
+    # oracle per row: union of parts, dead ids dropped, (dist, id)-sorted,
+    # truncated to the nearest m AFTER the tombstone drop
+    for row in range(q):
+        cand = []
+        for p in parts:
+            lo, hi = p.offsets[row], p.offsets[row + 1]
+            cand += [
+                (float(d), int(i))
+                for d, i in zip(p.dists[lo:hi], p.idxs[lo:hi])
+                if not n_tombs or i not in set(tombs.tolist())
+            ]
+        cand.sort()
+        live = len(cand)
+        if m is not None:
+            cand = cand[:m]
+        lo, hi = ref.offsets[row], ref.offsets[row + 1]
+        assert ref.idxs[lo:hi].tolist() == [i for _, i in cand]
+        assert ref.dists[lo:hi].tolist() == pytest.approx(
+            [d for d, _ in cand], abs=0
+        )
+        if m is not None:
+            assert bool(ref.truncated[row]) == (live > m)
+
+    # commutativity
+    perm = rng.permutation(len(parts))
+    shuffled = merge_range([parts[j] for j in perm], **kw)
+    assert np.array_equal(ref.offsets, shuffled.offsets)
+    assert _range_rows(ref) == _range_rows(shuffled)
+    if m is not None:
+        assert np.array_equal(ref.truncated, shuffled.truncated)
+
+    # associativity: pre-merge a prefix UNCAPPED (the inner fold must not
+    # truncate, or it could drop a live entry the outer cap would keep),
+    # then fold the rest under the real cap
+    if len(parts) > 1:
+        cut = 1 + int(rng.integers(0, len(parts) - 1))
+        pre = merge_range(
+            parts[:cut],
+            radius=radius,
+            tombstones=tombs if n_tombs else None,
+        )
+        nested = merge_range([pre] + parts[cut:], **kw)
+        assert np.array_equal(ref.offsets, nested.offsets)
+        assert _range_rows(ref) == _range_rows(nested)
+        if m is not None:
+            assert np.array_equal(ref.truncated, nested.truncated)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    k=st.integers(1, 6),
+    n_ids=st.integers(4, 16),
+)
+def test_merge_knn_tombstone_mask_before_truncation(seed, k, n_ids):
+    """A part holding the k nearest overall but k+T nearest LIVE ids must
+    still yield the live top-k: mask-then-truncate, never the reverse."""
+    rng = np.random.default_rng(seed)
+    # one part whose first k slots are all tombstoned: a truncate-first
+    # merge would answer all-dead rows, mask-first must surface the tail
+    ids = rng.permutation(n_ids)
+    d = np.sort(rng.random(n_ids)).astype(np.float32)[None, :]
+    part = KNNResult(dists=d, idxs=ids[None, :].astype(np.int32), n_tests=0)
+    n_dead = min(k, n_ids - 1)
+    tombs = ids[:n_dead].astype(np.int64)
+    out = merge_knn([part], k=k, sentinel=n_ids, tombstones=tombs)
+    live = [int(i) for i in ids[n_dead:][:k]]
+    got = [int(i) for i in out.idxs[0] if i != n_ids]
+    assert got == live
+    assert not np.isin(out.idxs, tombs).any()

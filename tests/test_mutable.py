@@ -1,0 +1,419 @@
+"""Mutable-index subsystem tests.
+
+The contract under test: a ``backend="mutable"`` composite (immutable
+base + brute delta shards + tombstones) answers every spec/metric
+bit-identically to a fresh monolithic brute index built over the same
+logical snapshot (``map_to_stable`` lifts the rebuild's positional idxs
+into stable-id space) — through insert/delete storms, mid-compaction,
+and background compaction.  Plus the satellite surfaces: empty (N=0)
+builds across every backend, plan generation staleness, and the
+NeighborServer write queue.
+"""
+
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    CompactionPolicy,
+    HybridSpec,
+    KnnSpec,
+    NeighborServer,
+    RangeSpec,
+    build_index,
+    make_mutable,
+    map_to_stable,
+)
+from repro.api.backends import MutableIndex
+
+METRICS = ("l2", "l1", "linf", "cosine")
+
+
+def _cloud(n, d=3, seed=0):
+    return np.random.default_rng(seed).normal(size=(n, d)).astype(np.float32)
+
+
+def _same_knn(a, b):
+    assert np.array_equal(a.dists, b.dists)
+    assert np.array_equal(a.idxs, b.idxs)
+    assert (a.found is None) == (b.found is None)
+    if a.found is not None:
+        assert np.array_equal(a.found, b.found)
+
+
+def _same_range(a, b):
+    assert np.array_equal(a.offsets, b.offsets)
+    assert np.array_equal(a.idxs, b.idxs)
+    assert np.array_equal(a.dists, b.dists)
+    assert (a.truncated is None) == (b.truncated is None)
+    if a.truncated is not None:
+        assert np.array_equal(a.truncated, b.truncated)
+
+
+def _assert_identity(mut, qs, specs, metrics=METRICS):
+    """Every (metric, spec) answer equals the monolithic brute rebuild
+    over the same logical snapshot, bit for bit."""
+    live_pts, live_ids = mut.snapshot()
+    mono = build_index(live_pts, backend="brute")
+    for metric in metrics:
+        for spec in specs:
+            got = mut.query(qs, spec, metric=metric)
+            want = map_to_stable(
+                mono.query(qs, spec, metric=metric), live_ids, mut.sentinel
+            )
+            if isinstance(spec, RangeSpec):
+                _same_range(got, want)
+            else:
+                _same_knn(got, want)
+
+
+def _specs(k, r):
+    return [KnnSpec(k), RangeSpec(r, max_neighbors=2 * k), HybridSpec(k, r)]
+
+
+# -- empty (N=0) builds across every backend --------------------------------
+
+
+@pytest.mark.parametrize(
+    "backend",
+    ["brute", "fixed_radius", "trueknn", "distributed", "sharded", "mutable"],
+)
+def test_empty_build_and_query_shapes(backend):
+    idx = build_index(np.empty((0, 3), np.float32), backend=backend)
+    assert idx.n_points == 0
+    q = np.zeros((4, 3), np.float32)
+    knn = idx.query(q, KnnSpec(k=3))
+    assert knn.dists.shape == (4, 3) and np.isinf(knn.dists).all()
+    assert (knn.idxs == idx.sentinel).all()
+    rng_res = idx.query(q, RangeSpec(radius=1.0))
+    assert rng_res.offsets.tolist() == [0, 0, 0, 0, 0]
+    assert rng_res.idxs.size == 0 and rng_res.dists.size == 0
+    hyb = idx.query(q, HybridSpec(2, 1.0))
+    assert hyb.dists.shape == (4, 2) and np.isinf(hyb.dists).all()
+
+
+def test_mutable_grows_from_empty():
+    mut = build_index(np.empty((0, 2), np.float32), backend="mutable",
+                      base_backend="brute")
+    assert mut.n_points == 0 and mut.dim == 2
+    ids = mut.insert(np.eye(2, dtype=np.float32))
+    assert ids.tolist() == [0, 1] and mut.n_points == 2
+    res = mut.query(np.zeros((1, 2), np.float32), KnnSpec(k=2))
+    assert sorted(res.idxs[0].tolist()) == [0, 1]
+    _assert_identity(mut, np.zeros((1, 2), np.float32),
+                     _specs(2, 1.5), metrics=("l2",))
+
+
+# -- mutation basics --------------------------------------------------------
+
+
+def test_insert_returns_monotonic_stable_ids():
+    pts = _cloud(20)
+    mut = build_index(pts, backend="mutable", base_backend="brute")
+    assert mut.sentinel == 20
+    a = mut.insert(_cloud(3, seed=1))
+    b = mut.insert(_cloud(2, seed=2)[0])  # single (d,) row
+    assert a.tolist() == [20, 21, 22] and b.tolist() == [23]
+    assert mut.n_points == 24 and mut.sentinel == 24
+
+
+def test_insert_validates_shape():
+    mut = build_index(_cloud(5), backend="mutable", base_backend="brute")
+    with pytest.raises(ValueError):
+        mut.insert(np.zeros((2, 7), np.float32))
+
+
+def test_delete_unknown_or_dead_id_raises():
+    mut = build_index(_cloud(6), backend="mutable", base_backend="brute")
+    assert mut.delete([1, 3]) == 2
+    with pytest.raises(KeyError):
+        mut.delete([3])  # already dead
+    with pytest.raises(KeyError):
+        mut.delete([99])  # never existed
+    assert mut.n_points == 4  # failed deletes applied nothing
+
+
+def test_deleted_rows_never_answer():
+    pts = _cloud(30)
+    mut = build_index(pts, backend="mutable", base_backend="brute")
+    mut.delete([0, 5, 7, 29])
+    res = mut.query(pts[:8], KnnSpec(k=10))
+    assert not np.isin(res.idxs, [0, 5, 7, 29]).any()
+    _assert_identity(mut, pts[:4], _specs(4, 1.0), metrics=("l2",))
+
+
+def test_self_query_identity_after_mutation():
+    pts = _cloud(40)
+    mut = build_index(pts, backend="mutable", base_backend="brute")
+    mut.insert(_cloud(10, seed=3))
+    mut.delete([2, 4, 41])
+    live_pts, live_ids = mut.snapshot()
+    mono = build_index(live_pts, backend="brute")
+    for spec in _specs(3, 1.2):
+        got = mut.query(None, spec)
+        want = map_to_stable(mono.query(None, spec), live_ids, mut.sentinel)
+        if isinstance(spec, RangeSpec):
+            _same_range(got, want)
+        else:
+            _same_knn(got, want)
+
+
+# -- write storms -----------------------------------------------------------
+
+
+def test_storm_identity_all_metrics_and_specs():
+    rng = np.random.default_rng(4)
+    pts = _cloud(150)
+    qs = _cloud(12, seed=5)
+    mut = build_index(
+        pts, backend="mutable", base_backend="brute",
+        delta_rows=24, compact_min_rows=48, compact_ratio=0.2,
+        tombstone_ratio=0.15, auto_compact="inline",
+    )
+    pool = list(range(150))
+    for op in range(30):
+        if pool and rng.random() < 0.4:
+            take = int(min(len(pool), 1 + rng.integers(0, 8)))
+            sel = sorted(
+                map(int, rng.choice(len(pool), size=take, replace=False)),
+                reverse=True,
+            )
+            mut.delete([pool.pop(i) for i in sel])
+        else:
+            m = int(1 + rng.integers(0, 12))
+            pool.extend(int(i) for i in mut.insert(_cloud(m, seed=100 + op)))
+        if op % 6 == 5:
+            _assert_identity(mut, qs, _specs(5, 1.0))
+    assert mut.stats()["compactions"] >= 1  # the storm spanned compactions
+    _assert_identity(mut, qs, _specs(5, 1.0))
+
+
+def test_mid_compaction_identity():
+    """Reads served while a compaction is parked between base-rebuild and
+    swap must equal the pre-swap logical snapshot; post-swap too."""
+    pts = _cloud(80)
+    qs = _cloud(6, seed=6)
+    mut = build_index(pts, backend="mutable", base_backend="brute",
+                      delta_rows=16, auto_compact="off")
+    mut.insert(_cloud(20, seed=7))
+    mut.delete([1, 9, 85])
+    built, release = threading.Event(), threading.Event()
+
+    def parked(_index):
+        built.set()
+        release.wait(timeout=60)
+
+    mut._on_compact_built = parked
+    t = threading.Thread(target=mut.compact, daemon=True)
+    t.start()
+    assert built.wait(timeout=60)
+    try:
+        assert mut.stats()["compacting"]
+        assert mut.compact() is False  # in-flight guard
+        _assert_identity(mut, qs, _specs(4, 1.0), metrics=("l2", "cosine"))
+    finally:
+        release.set()
+        t.join()
+    mut._on_compact_built = None
+    st = mut.stats()
+    assert st["compactions"] == 1 and st["delta_shards"] == 0
+    assert st["tombstones"] == 0  # consumed tombstones retired
+    _assert_identity(mut, qs, _specs(4, 1.0), metrics=("l2", "cosine"))
+
+
+def test_background_compaction():
+    pts = _cloud(60)
+    mut = build_index(
+        pts, backend="mutable", base_backend="brute",
+        delta_rows=16, compact_min_rows=24, compact_ratio=0.2,
+        auto_compact="background",
+    )
+    mut.insert(_cloud(40, seed=8))
+    deadline = threading.Event()
+    for _ in range(200):  # rebuild runs on a daemon thread
+        if mut.stats()["compactions"] >= 1:
+            break
+        deadline.wait(0.02)
+    st = mut.stats()
+    assert st["compactions"] >= 1
+    assert st["base_rows"] == 100
+    _assert_identity(mut, _cloud(5, seed=9), _specs(4, 1.0), metrics=("l2",))
+
+
+def test_compaction_policy_due():
+    p = CompactionPolicy(min_rows=100, ratio=0.5, tombstone_ratio=0.2)
+    assert not p.due(1000, 0, 0)
+    assert not p.due(1000, 400, 0)   # below max(100, 500)
+    assert p.due(1000, 500, 0)
+    assert not p.due(1000, 50, 100)  # tombs below 0.2 * 1050
+    assert p.due(1000, 50, 210)
+    with pytest.raises(ValueError):
+        CompactionPolicy(mode="sometimes")
+
+
+# -- adoption, stop_radius, start_radius ------------------------------------
+
+
+def test_make_mutable_adopts_without_rebuild():
+    pts = _cloud(100)
+    base = build_index(pts, backend="trueknn")
+    mut = make_mutable(base, delta_rows=32, auto_compact="off")
+    assert isinstance(mut, MutableIndex)
+    assert mut._base is base  # adopted, not rebuilt
+    assert mut.n_points == 100 and mut.sentinel == 100
+    mut.insert(_cloud(10, seed=10))
+    mut.delete([3, 103])
+    # trueknn base: l2 knn/hybrid are bitwise vs a brute monolith
+    live_pts, live_ids = mut.snapshot()
+    mono = build_index(live_pts, backend="brute")
+    qs = _cloud(8, seed=11)
+    for spec in (KnnSpec(4), HybridSpec(4, 1.0)):
+        got = mut.query(qs, spec)
+        want = map_to_stable(mono.query(qs, spec), live_ids, mut.sentinel)
+        _same_knn(got, want)
+    assert make_mutable(mut) is mut  # passthrough
+    with pytest.raises(ValueError):
+        make_mutable(mut, delta_rows=64)  # knobs only at build time
+
+
+def test_mutable_rejects_mutable_base():
+    with pytest.raises(ValueError):
+        build_index(_cloud(10), backend="mutable", base_backend="mutable")
+
+
+def test_stop_radius_uses_companion():
+    pts = _cloud(120)
+    mut = make_mutable(build_index(pts, backend="trueknn"), auto_compact="off")
+    mut.insert(_cloud(15, seed=12))
+    mut.delete([0, 11])
+    qs = _cloud(6, seed=13)
+    spec = KnnSpec(4, stop_radius=0.8)
+    got = mut.query(qs, spec)
+    assert got.timings["plan"] == "mutable/companion"
+    live_pts, live_ids = mut.snapshot()
+    mono = build_index(live_pts, backend="trueknn")
+    want = map_to_stable(mono.query(qs, spec), live_ids, mut.sentinel)
+    _same_knn(got, want)
+
+
+# -- plan staleness ---------------------------------------------------------
+
+
+def test_plan_self_invalidates_on_mutation():
+    pts = _cloud(50)
+    mut = build_index(pts, backend="mutable", base_backend="brute",
+                      auto_compact="off")
+    plan = mut.prepare(KnnSpec(k=3))
+    qs = _cloud(5, seed=14)
+    plan(qs)
+    assert plan.cache_stats()["invalidations"] == 0
+    mut.insert(_cloud(4, seed=15))
+    res = plan(qs)  # transparently re-prepares against the new generation
+    assert plan.cache_stats()["invalidations"] == 1
+    _assert_identity(mut, qs, [KnnSpec(k=3)], metrics=("l2",))
+    live_pts, live_ids = mut.snapshot()
+    mono = build_index(live_pts, backend="brute")
+    want = map_to_stable(mono.query(qs, KnnSpec(k=3)), live_ids, mut.sentinel)
+    _same_knn(res, want)
+    assert plan.explain()["generation"] == mut.generation
+
+
+# -- server write queue -----------------------------------------------------
+
+
+def test_server_read_your_writes():
+    pts = _cloud(60)
+    mut = make_mutable(build_index(pts, backend="brute"), auto_compact="off")
+    srv = NeighborServer(mut)
+    qs = _cloud(6, seed=16)
+    t_read0 = srv.submit(qs, KnnSpec(k=4))
+    t_ins = srv.submit_insert(_cloud(5, seed=17))
+    t_del = srv.submit_delete([2, 8])
+    t_read1 = srv.submit(qs, KnnSpec(k=4))  # same bucket as read0
+    r0, minted, n_del, r1 = (
+        t_read0.result(), t_ins.result(), t_del.result(), t_read1.result()
+    )
+    assert minted.tolist() == [60, 61, 62, 63, 64] and n_del == 2
+    # read0 saw the pre-write cloud, read1 the post-write one
+    mono0 = build_index(pts, backend="brute")
+    _same_knn(r0, mono0.query(qs, KnnSpec(k=4)))
+    live_pts, live_ids = mut.snapshot()
+    mono1 = build_index(live_pts, backend="brute")
+    _same_knn(r1, map_to_stable(mono1.query(qs, KnnSpec(k=4)),
+                                live_ids, mut.sentinel))
+
+
+def test_server_write_purges_result_cache():
+    pts = _cloud(40)
+    mut = make_mutable(build_index(pts, backend="brute"), auto_compact="off")
+    srv = NeighborServer(mut, cache_size=64)
+    qs = _cloud(3, seed=18)
+    srv.submit(qs, KnnSpec(k=3)).result()
+    srv.submit(qs, KnnSpec(k=3)).result()  # primes + hits the cache
+    assert srv.stats()["cache"]["hits"] >= 3
+    srv.submit_delete([0]).result()
+    after = srv.submit(qs, KnnSpec(k=3)).result()
+    assert not np.isin(after.idxs, [0]).any()
+
+
+def test_server_write_rejected_on_immutable_tenant():
+    srv = NeighborServer(build_index(_cloud(10), backend="brute"))
+    t = srv.submit_insert(np.zeros((1, 3), np.float32))
+    with pytest.raises(NotImplementedError):
+        t.result()
+    with pytest.raises(NotImplementedError):
+        srv.submit_delete([0]).result()  # immutable: deletes fail too
+
+
+def test_server_write_stats_and_plan_invalidations():
+    pts = _cloud(50)
+    mut = make_mutable(build_index(pts, backend="brute"), auto_compact="off")
+    srv = NeighborServer(mut)
+    qs = _cloud(4, seed=19)
+    srv.prepare(KnnSpec(k=3))
+    srv.submit(qs, KnnSpec(k=3)).result()
+    srv.submit_insert(_cloud(2, seed=20)).result()
+    srv.submit_delete([1]).result()
+    srv.submit(qs, KnnSpec(k=3)).result()
+    st = srv.stats()
+    w = st["writes"]["default"]
+    assert w == {"inserts": 2, "deletes": 1, "write_ops": 2}
+    assert st["plan_cache"]["invalidations"] >= 1
+    wbuckets = [b for name, b in st["buckets"].items() if "/write/" in name]
+    assert wbuckets and wbuckets[0]["requests"] == 2
+    assert st["indexes"]["default"]["tombstones"] == 1
+    assert st["indexes"]["default"]["delta_rows"] == 2
+
+
+def test_server_validates_write_shapes_up_front():
+    srv = NeighborServer(
+        make_mutable(build_index(_cloud(10), backend="brute"))
+    )
+    with pytest.raises(ValueError):
+        srv.submit_insert(np.zeros((2, 9), np.float32))
+    with pytest.raises(ValueError):
+        srv.submit_insert(np.zeros((0, 3), np.float32))
+    with pytest.raises(ValueError):
+        srv.submit_delete([])
+
+
+# -- map_to_stable ----------------------------------------------------------
+
+
+def test_map_to_stable_maps_positions_and_sentinel():
+    pts = _cloud(10)
+    mut = build_index(pts, backend="mutable", base_backend="brute")
+    mut.delete([0, 3])
+    live_pts, live_ids = mut.snapshot()
+    assert live_ids.tolist() == [1, 2, 4, 5, 6, 7, 8, 9]
+    mono = build_index(live_pts, backend="brute")
+    res = mono.query(_cloud(2, seed=21), KnnSpec(k=10))  # k > live: padding
+    lifted = map_to_stable(res, live_ids, mut.sentinel)
+    pad = ~np.isfinite(res.dists)
+    assert (lifted.idxs[pad] == mut.sentinel).all()
+    assert np.array_equal(
+        lifted.idxs[~pad], live_ids[res.idxs[~pad]].astype(np.int32)
+    )
