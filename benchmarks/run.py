@@ -25,6 +25,7 @@ def main() -> None:
         bench_kernel,
         bench_mutation,
         bench_percentile,
+        bench_placement,
         bench_plan_cache,
         bench_query_plans,
         bench_rounds,
@@ -69,6 +70,11 @@ def main() -> None:
     with open("BENCH_shards.json", "w") as f:
         json.dump(shards_summary, f, indent=2, default=str)
     print("# wrote BENCH_shards.json", flush=True)
+    _section("placement (device-parallel fabric: fused dispatch, identity)")
+    placement_summary = bench_placement.main()
+    with open("BENCH_placement.json", "w") as f:
+        json.dump(placement_summary, f, indent=2, default=str)
+    print("# wrote BENCH_placement.json", flush=True)
     _section("plan cache (prepared plans: executable reuse, n_tests parity)")
     plan_cache_summary = bench_plan_cache.main()
     with open("BENCH_plan_cache.json", "w") as f:

@@ -122,5 +122,25 @@ print(
     f"tombstones={st['tombstones']} (generation {mindex.generation})"
 )
 
+# -- device placement: one fused dispatch per sharded round ------------------
+# placement="devices" pins each shard's point block to a mesh device and
+# runs every shared-cut round as ONE device-parallel dispatch instead of
+# S sequential child queries — bit-identical answers, and the plan tag
+# grows a /placed=<dispatches> suffix.  Works on however many devices the
+# process booted with (to force a CPU mesh, set
+# XLA_FLAGS=--xla_force_host_platform_device_count=8 before running, or
+# use `launch.serve --placement devices --devices 8`).
+placed = build_index(pts, backend="sharded", n_shards="auto",
+                     placement="devices")
+pres = placed.query(qs, KnnSpec(k=5))
+ps = placed.stats()["placement"]
+print(
+    f"placed: {placed.n_shards} shards in {ps['slots']} slots on "
+    f"{ps['devices']} device(s), plan={pres.timings['plan']}, "
+    f"occupancy={ps['device_occupancy']}"
+)
+print(f"placed == monolith: "
+      f"{bool(np.array_equal(pres.dists, index.query(qs, KnnSpec(k=5)).dists))}")
+
 print(f"registered backends: {available_backends()}")
 print(f"registered metrics:  {available_metrics()}")

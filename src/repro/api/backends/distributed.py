@@ -36,7 +36,9 @@ def _default_mesh(point_axis: str):
         warnings.warn(
             f"distributed backend: using {p} of {len(devs)} available "
             f"devices (the hypercube top-k merge needs a power-of-2 shard "
-            f"count); pass an explicit mesh to choose which devices serve",
+            f"count); pass an explicit mesh to choose which devices serve, "
+            f"or use backend='sharded' with placement='devices', whose "
+            f"padded slot axis uses every device at any count",
             RuntimeWarning,
             stacklevel=3,
         )

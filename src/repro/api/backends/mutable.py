@@ -284,6 +284,11 @@ class MutableIndex(NeighborIndex):
                 "compacting": self._compacting,
             }
             s.update(self._c)
+            bp = self._base.stats().get("placement")
+            if isinstance(bp, dict) and bp.get("mode") == "devices":
+                # surface the placed base's occupancy/dispatch section so
+                # serving meters see through the LSM composite
+                s["placement"] = bp
             return s
 
     # -- mutation ----------------------------------------------------------

@@ -52,7 +52,18 @@ from .metrics import get_metric
 from .planner import build_plan, empty_result, run_plan
 from .query import QuerySpec
 
-__all__ = ["QueryPlan", "PlanContext"]
+__all__ = ["QueryPlan", "PlanContext", "canonical_rows"]
+
+
+def canonical_rows(m: int, floor: int = 1) -> int:
+    """The canonical padded row count for a dispatch subset: the next
+    power of two, floored at ``floor`` so tiny subsets collapse into ONE
+    bucket.  This is THE shape-canonicalization rule of the executable
+    cache — the top-level batch pad, the sharded backend's per-child
+    visit-sets and the placed fabric's fused dispatches all key their
+    compiled executables on it, so a handful of executables serves every
+    batch/shard/visit-mask mix."""
+    return _next_pow2(max(int(m), int(floor)))
 
 
 class PlanContext:
@@ -160,7 +171,7 @@ class QueryPlan:
         if not self.canonical_shapes:
             self._record_bucket(("q", m))
             return run_plan(self.root, self.index, q, self.ctx)
-        m_pad = _next_pow2(m)
+        m_pad = canonical_rows(m)
         self._record_bucket(("q", m_pad))
         if m_pad > m:
             # duplicate row 0: real queries to every engine (cheap, exact),

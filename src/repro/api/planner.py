@@ -77,6 +77,7 @@ __all__ = [
     "range_via_counted_topk",
     "shard_visit_mask",
     "shard_plan_tag",
+    "placed_plan_tag",
 ]
 
 _L2 = "l2"
@@ -105,6 +106,15 @@ def shard_plan_tag(visited: int, potential: int) -> str:
     """``sharded/pruned=<m-of-n>``: m of the n potential (query, shard)
     visits were pruned away this call."""
     return f"sharded/pruned={int(potential) - int(visited)}-of-{int(potential)}"
+
+
+def placed_plan_tag(visited: int, potential: int, dispatches: int) -> str:
+    """The device-placed flavor of :func:`shard_plan_tag`: same pruning
+    count (the placed path prunes identically — masks are data), plus how
+    many fused dispatches answered the whole call.  Keeps the
+    ``sharded/pruned=`` prefix so every existing tag consumer still
+    parses it."""
+    return shard_plan_tag(visited, potential) + f"/placed={int(dispatches)}"
 
 
 def apply_radius_cut(dists, idxs, cut: float, sentinel: int):

@@ -808,10 +808,34 @@ class NeighborServer:
                     name: dict(w) for name, w in self._tenant_writes.items()
                 },
                 "buckets": buckets,
+                "placement": self._placement_summary(),
                 "indexes": {
                     name: idx.stats() for name, idx in self._indexes.items()
                 },
             }
+
+    def _placement_summary(self) -> dict:
+        """Device-placement roll-up across tenants: per placed tenant the
+        mesh occupancy and fused-dispatch/rebalance counters (from the
+        sharded backend's ``stats()["placement"]`` section), plus fleet
+        totals — the serving-side view of the one-dispatch-per-round
+        fabric."""
+        tenants = {}
+        for name, idx in self._indexes.items():
+            # both the sharded backend and the mutable composite (placed
+            # base) surface the section through stats()
+            ps = idx.stats().get("placement")
+            if isinstance(ps, dict) and ps.get("mode") == "devices":
+                tenants[name] = ps
+        return {
+            "tenants": tenants,
+            "fused_dispatches": sum(
+                t.get("fused_dispatches", 0) for t in tenants.values()
+            ),
+            "rebalances": sum(
+                t.get("rebalances", 0) for t in tenants.values()
+            ),
+        }
 
     # -- prepared plans ----------------------------------------------------
 

@@ -13,9 +13,22 @@ The multi-round TrueKNN driver composes on top: the paper's query-retirement
 happens host-side between rounds (compaction), so later rounds move fewer
 queries through the mesh — the distributed transplant of "don't relaunch
 resolved rays".
+
+:class:`PlacedFabric` is the second placement primitive in this file, built
+for the ``sharded`` composite backend: instead of one cloud split evenly
+over a pow2 ``model`` axis, it pins an arbitrary list of per-shard point
+blocks to mesh devices (padded slot axis, masked empty slots — any device
+count works) and answers one *fused* per-slot top-k/count dispatch per
+call.  It deliberately has no merge network: per-slot candidate lists
+gather back to the host, where the sharded backend's exact merge paths
+(``topk_merge_rows`` / ``merge_range``) fold them with the same float
+semantics as its sequential per-child path — the fabric only removes the
+S-sequential-dispatch launch tax, never touches answer bits.
 """
 
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -185,3 +198,243 @@ def distributed_trueknn(
         out_i[alive] = idx
 
     return np.sqrt(np.maximum(out_d, 0)), out_i, rounds, n_tests
+
+
+# -- placed shard fabric ------------------------------------------------------
+
+#: distance forms the fused slot dispatch can compute.  Each one replicates,
+#: op for op, the float32 arithmetic of the engine the sharded backend's
+#: sequential per-child path would have used for the same route, so host-side
+#: folds stay bit-identical:
+#:   sq_l2   — squared L2 via the diff form (``fixed_radius``/low-d brute);
+#:             callers sqrt on the host (device sqrt rounds differently).
+#:   l1      — |diff| summed with ``jnp.sum`` (the brute engine's knn form).
+#:   l1_acc  — |diff| accumulated per axis in order (the Pallas kernel's
+#:             range form; ``jnp.sum``'s reduce order differs at d >= 3).
+#:   linf    — running max of |diff| (exact either way; one form suffices).
+PLACED_FORMS = ("sq_l2", "l1", "l1_acc", "linf")
+
+
+class PlacedFabric:
+    """Per-shard point blocks pinned to mesh devices, one fused dispatch.
+
+    The sharded backend's scale seam made answers exact; this makes the
+    fabric *parallel*: every shard's rows live as a zero-padded block in a
+    (slots, block_rows, dim) array sharded over a 1-D mesh axis, and one
+    ``shard_map`` call computes every slot's dense top-k (and in-radius
+    count) against the whole query batch — visit masks and the radius
+    threshold ride along as device-resident *data*, so a round is ONE
+    XLA dispatch whatever the shard mix, and mixed visit patterns reuse
+    the same compiled executable.
+
+    Slot layout: ``n_slots`` is the shard count rounded UP to a multiple
+    of the device count — a non-pow2 (or non-divisor) device count costs
+    masked empty slots, never silently dropped devices (contrast the
+    distributed backend's pow2-prefix mesh).  Hot shards can be *split*
+    across free slots (:meth:`rebalance`): each slot owns a contiguous
+    ascending-index row range of its shard, so the union of slot answers
+    is exactly the shard answer and merges stay order-exact.
+
+    The fabric is space-aware: metric routes that search a transformed
+    cloud (cosine's normalize-then-L2) register the transform once via
+    :meth:`add_space` and dispatch against lazily placed transformed
+    blocks, mirroring the companion ``metric_view`` indexes of the
+    sequential path.
+    """
+
+    def __init__(self, blocks, *, mesh: Mesh | None = None,
+                 axis: str = "shard"):
+        blocks = [np.ascontiguousarray(b, np.float32) for b in blocks]
+        assert blocks, "PlacedFabric needs at least one shard block"
+        self._axis = axis
+        if mesh is None:
+            mesh = Mesh(np.asarray(jax.devices()), (axis,))
+        self.mesh = mesh
+        self.n_devices = int(mesh.shape[axis])
+        self._spaces = {"raw": blocks}  # name -> per-shard host blocks
+        n_shards = len(blocks)
+        d = self.n_devices
+        # pad the slot axis to a device multiple: every device carries the
+        # same number of slots, empty slots are fully masked
+        self.n_slots = -(-n_shards // d) * d
+        self.block_rows = max(max(b.shape[0] for b in blocks), 1)
+        self.dim = blocks[0].shape[1]
+        #: slot j -> (shard id, row lo, row hi) within that shard's block;
+        #: (-1, 0, 0) marks an empty (padding or not-yet-used) slot
+        self.slots = [(s, 0, blocks[s].shape[0]) for s in range(n_shards)]
+        self.slots += [(-1, 0, 0)] * (self.n_slots - n_shards)
+        self.dispatches = 0
+        self.rebalances = 0
+        self._dev_blocks: dict = {}  # space name -> placed (slots, B, dim)
+        self._dev_nvalid = None
+
+    # -- spaces ------------------------------------------------------------
+
+    def add_space(self, name: str, transform) -> None:
+        """Register a transformed search space (e.g. cosine's normalized
+        cloud).  ``transform`` maps one host block (n, dim) -> (n, dim);
+        applied per shard so transformed blocks match the sequential
+        path's companion indexes row for row."""
+        if name not in self._spaces:
+            self._spaces[name] = [
+                transform(b) if b.size else b for b in self._spaces["raw"]
+            ]
+
+    def has_space(self, name: str) -> bool:
+        return name in self._spaces
+
+    # -- placement ---------------------------------------------------------
+
+    def _placed_nvalid(self):
+        if self._dev_nvalid is None:
+            nv = np.asarray([hi - lo for _, lo, hi in self.slots], np.int32)
+            self._dev_nvalid = jax.device_put(
+                nv, NamedSharding(self.mesh, P(self._axis))
+            )
+        return self._dev_nvalid
+
+    def _placed_blocks(self, space: str):
+        placed = self._dev_blocks.get(space)
+        if placed is None:
+            host = self._spaces[space]
+            arr = np.zeros(
+                (self.n_slots, self.block_rows, self.dim), np.float32
+            )
+            for j, (s, lo, hi) in enumerate(self.slots):
+                if s >= 0 and hi > lo:
+                    arr[j, : hi - lo] = host[s][lo:hi]
+            placed = jax.device_put(
+                arr, NamedSharding(self.mesh, P(self._axis, None, None))
+            )
+            self._dev_blocks[space] = placed
+        return placed
+
+    def _invalidate_placement(self) -> None:
+        self._dev_blocks.clear()
+        self._dev_nvalid = None
+
+    # -- the fused dispatch ------------------------------------------------
+
+    @functools.lru_cache(maxsize=None)  # noqa: B019 — lives with the fabric
+    def _fused_fn(self, form: str, k: int):
+        """Jitted shard_map round for (distance form, top-k width); query
+        count buckets through jit's own shape cache, and the visit mask /
+        threshold are traced data, so mixed shard cuts share executables."""
+        assert form in PLACED_FORMS, form
+        axis = self._axis
+        B = self.block_rows
+
+        def one_slot(blk, nv, vm, q, thr):
+            # blk (B, dim) zero-padded rows; nv () valid-row count;
+            # vm (Qp,) this slot's visit mask; q (Qp, dim); thr () f32
+            if form == "sq_l2":
+                diff = q[:, None, :] - blk[None, :, :]
+                dist = jnp.sum(diff * diff, -1)
+            elif form == "l1":
+                ad = jnp.abs(q[:, None, :] - blk[None, :, :])
+                dist = jnp.sum(ad, axis=-1)
+            elif form == "linf":
+                ad = jnp.abs(q[:, None, :] - blk[None, :, :])
+                dist = jnp.max(ad, -1)
+            else:  # l1_acc: the kernel's per-axis accumulation order
+                dist = jnp.zeros((q.shape[0], B), jnp.float32)
+                for a in range(q.shape[1]):
+                    dist = dist + jnp.abs(q[:, a][:, None] - blk[:, a][None, :])
+            keep = (jnp.arange(B, dtype=jnp.int32)[None, :] < nv) & vm[:, None]
+            dist = jnp.where(keep, dist, jnp.inf)
+            cnt = jnp.sum((dist <= thr) & keep, axis=1, dtype=jnp.int32)
+            kk = min(k, B)
+            neg, idx = jax.lax.top_k(-dist, kk)
+            d = -neg
+            idx = jnp.where(jnp.isfinite(d), idx, B).astype(jnp.int32)
+            if kk < k:
+                d = jnp.concatenate(
+                    [d, jnp.full((d.shape[0], k - kk), jnp.inf, d.dtype)], 1
+                )
+                idx = jnp.concatenate(
+                    [idx, jnp.full((idx.shape[0], k - kk), B, jnp.int32)], 1
+                )
+            return d, idx, cnt
+
+        def local(blocks, nvalid, vmask, q, thr):
+            # per-device slice: blocks (g, B, dim), nvalid (g,), vmask (g, Qp)
+            return jax.vmap(
+                lambda b, n, v: one_slot(b, n, v, q, thr[0, 0])
+            )(blocks, nvalid, vmask)
+
+        from jax.experimental.shard_map import shard_map
+
+        fn = shard_map(
+            local,
+            mesh=self.mesh,
+            in_specs=(
+                P(axis, None, None),
+                P(axis),
+                P(axis, None),
+                P(None, None),
+                P(None, None),
+            ),
+            out_specs=(P(axis, None, None), P(axis, None, None),
+                       P(axis, None)),
+            check_rep=False,
+        )
+        return jax.jit(fn)
+
+    def topk(self, space: str, form: str, queries, visit_slots, k: int,
+             threshold: float = np.inf):
+        """One fused per-slot dispatch: dense top-k of every slot block
+        against ``queries`` plus the per-(slot, query) count of candidates
+        with ``dist <= threshold``.
+
+        queries: (Qp, dim) float32.
+        visit_slots: (n_slots, Qp) bool — False pairs contribute nothing
+            (their slots still run; masking is data, not shape).
+        Returns host arrays ``(d (slots, Qp, k) raw engine-form distances,
+        idx (slots, Qp, k) slot-local rows — ``block_rows`` = no candidate,
+        cnt (slots, Qp) int32)``.
+        """
+        q = np.ascontiguousarray(queries, np.float32)
+        vm = np.ascontiguousarray(visit_slots, bool)
+        assert vm.shape == (self.n_slots, q.shape[0]), vm.shape
+        thr = np.asarray([[threshold]], np.float32)
+        d, idx, cnt = self._fused_fn(form, int(k))(
+            self._placed_blocks(space), self._placed_nvalid(), vm, q, thr
+        )
+        self.dispatches += 1
+        return np.asarray(d), np.asarray(idx), np.asarray(cnt)
+
+    # -- load spreading ----------------------------------------------------
+
+    def slots_of(self, shard: int) -> list:
+        return [j for j, (s, _, _) in enumerate(self.slots) if s == shard]
+
+    def occupancy(self) -> list:
+        """Points resident per device (contiguous slot groups under the
+        1-D NamedSharding: device i owns slots [i*g, (i+1)*g))."""
+        g = self.n_slots // self.n_devices
+        return [
+            int(sum(hi - lo for _, lo, hi in self.slots[i * g:(i + 1) * g]))
+            for i in range(self.n_devices)
+        ]
+
+    def rebalance(self, shard: int) -> bool:
+        """Split the named shard's largest slot across a free slot — two
+        half-blocks of contiguous ascending rows, so slot answers union to
+        exactly the shard answer.  Shapes are unchanged (same slot count,
+        same block rows): no recompile, just a re-placement of the block
+        arrays.  Returns False when no free slot or nothing to split."""
+        free = [j for j, (s, _, _) in enumerate(self.slots) if s < 0]
+        if not free:
+            return False
+        mine = [(hi - lo, j) for j, (s, lo, hi) in enumerate(self.slots)
+                if s == shard and hi - lo >= 2]
+        if not mine:
+            return False
+        _, j = max(mine)
+        s, lo, hi = self.slots[j]
+        mid = (lo + hi) // 2
+        self.slots[j] = (s, lo, mid)
+        self.slots[free[0]] = (s, mid, hi)
+        self._invalidate_placement()
+        self.rebalances += 1
+        return True

@@ -39,10 +39,47 @@ import numpy as np
 __all__ = [
     "Partition",
     "partition_points",
+    "balanced_shard_count",
+    "shard_occupancy",
     "morton_codes",
     "aabb_min_dists",
     "aabb_max_dists",
 ]
+
+
+def balanced_shard_count(n_points: int, n_shards: int,
+                         n_devices: int) -> int:
+    """Device-count-aware shard arity: ``n_shards`` rounded UP to the
+    nearest multiple of ``n_devices`` (so placed slots fill every device
+    evenly and no padding slot stays empty for the life of the index),
+    then clamped to the point count exactly as :func:`partition_points`
+    would clamp it.  With ``n_devices <= 1`` (or a cloud too small to fill
+    the devices) the requested arity comes back unchanged."""
+    n_points = int(n_points)
+    n_shards = max(1, int(n_shards))
+    n_devices = max(1, int(n_devices))
+    if n_devices <= 1 or n_points <= 0:
+        return n_shards
+    rounded = -(-n_shards // n_devices) * n_devices
+    return max(1, min(rounded, n_points))
+
+
+def shard_occupancy(sizes, slot_shard, n_devices: int) -> list:
+    """Per-device point counts for a placed layout: ``slot_shard`` is the
+    slot -> shard assignment (-1 = empty slot, len a multiple of
+    ``n_devices``), slots map to devices in contiguous groups (the 1-D
+    ``NamedSharding`` layout).  The partition layer owns this so both the
+    fabric and the serving stats agree on what "occupancy" means."""
+    sizes = np.asarray(sizes, np.int64)
+    slot_shard = np.asarray(slot_shard, np.int64)
+    n_devices = max(1, int(n_devices))
+    assert slot_shard.size % n_devices == 0, slot_shard.size
+    g = slot_shard.size // n_devices
+    out = []
+    for i in range(n_devices):
+        grp = slot_shard[i * g:(i + 1) * g]
+        out.append(int(sizes[grp[grp >= 0]].sum()))
+    return out
 
 
 @dataclasses.dataclass(frozen=True)

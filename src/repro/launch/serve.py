@@ -16,6 +16,12 @@ or neighbor-search serving through the ``NeighborServer`` front-end.
     PYTHONPATH=src python -m repro.launch.serve --mode knn \
         --backend sharded --shards 8 --index lidar --arrival open --rate 500
 
+    # device-parallel placement: pin shard blocks across 8 (forced host)
+    # devices and serve every shared-cut round as ONE fused dispatch;
+    # --devices sets XLA_FLAGS before jax loads, so this works on any CPU
+    PYTHONPATH=src python -m repro.launch.serve --mode knn \
+        --backend sharded --shards 8 --placement devices --devices 8
+
     # closed loop (the pre-server demo shape, kept for comparison): one
     # fixed-size batch in flight at a time
     PYTHONPATH=src python -m repro.launch.serve --mode knn \
@@ -266,9 +272,23 @@ def _run_knn(args):
     pts = make_dataset(args.dataset, args.n, seed=0)
     rng = np.random.default_rng(1)
 
+    if args.devices is not None:
+        import jax
+
+        got = len(jax.devices())
+        if got != args.devices:
+            raise SystemExit(
+                f"--devices {args.devices} did not take effect (jax "
+                f"reports {got}); the jax backend was initialized before "
+                "this launcher set XLA_FLAGS — run serve as the entry "
+                "module"
+            )
+        print(f"forced host platform devices: {got}")
+
     cfg = {}
     if args.backend == "sharded":
         cfg["n_shards"] = args.shards
+        cfg["placement"] = args.placement
     t0 = time.perf_counter()
     index = build_index(pts, backend=args.backend, **cfg)
     shards = f", {args.shards} shards" if args.backend == "sharded" else ""
@@ -335,6 +355,13 @@ def _run_knn(args):
             )
         else:
             print(f"index {name!r} stats: {st}")
+    for name, p in s["placement"]["tenants"].items():
+        print(
+            f"placement {name!r}: {p['slots']} slots on {p['devices']} "
+            f"devices, occupancy {p['device_occupancy']}, "
+            f"{p['fused_dispatches']} fused dispatches, "
+            f"{p['rebalances']} rebalances"
+        )
 
 
 def main():
@@ -351,6 +378,16 @@ def main():
     ap.add_argument("--backend", default="trueknn")
     ap.add_argument("--shards", type=int, default=8,
                     help="partition arity for --backend sharded")
+    ap.add_argument("--placement", choices=["host", "devices"],
+                    default="host",
+                    help="sharded shard placement: host = sequential "
+                    "per-child queries; devices = pin shard blocks to mesh "
+                    "devices and run each shared-cut round as one fused "
+                    "dispatch")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="force N host platform devices (sets XLA_FLAGS "
+                    "before jax loads) — lets --placement devices run on "
+                    "a plain CPU box")
     ap.add_argument("--index", default="default",
                     help="tenant name the resident index serves under")
     ap.add_argument("--max-queue", type=int, default=None,
@@ -380,6 +417,19 @@ def main():
                     help="print each tenant's active structured plan trees "
                     "(plan.explain()) once at startup")
     args = ap.parse_args()
+    if args.devices is not None:
+        # XLA reads XLA_FLAGS when the backend first initializes (first
+        # jax.devices()/computation, not import), and every jax use in
+        # this launcher is function-local and downstream of here — so
+        # setting the env var now forces the host device count.
+        # _run_knn re-checks that the count actually took effect.
+        import os
+
+        flags = os.environ.get("XLA_FLAGS", "")
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count="
+            f"{int(args.devices)}"
+        ).strip()
     if args.mode == "knn":
         _run_knn(args)
     else:
