@@ -20,6 +20,7 @@ def main() -> None:
     from . import (
         bench_brute,
         bench_dataset_size,
+        bench_fused_loop,
         bench_index_reuse,
         bench_k,
         bench_kernel,
@@ -80,6 +81,11 @@ def main() -> None:
     with open("BENCH_plan_cache.json", "w") as f:
         json.dump(plan_cache_summary, f, indent=2, default=str)
     print("# wrote BENCH_plan_cache.json", flush=True)
+    _section("fused round loop (one dispatch per search: identity, latency)")
+    fused_summary = bench_fused_loop.main()
+    with open("BENCH_fused.json", "w") as f:
+        json.dump(fused_summary, f, indent=2, default=str)
+    print("# wrote BENCH_fused.json", flush=True)
     _section("mutation (LSM composite: storm identity, sustained, delta tax)")
     mutation_summary = bench_mutation.main()
     with open("BENCH_mutation.json", "w") as f:

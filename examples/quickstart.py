@@ -86,6 +86,20 @@ print(
     f"(start radius {res2.timings['start_radius_source']})"
 )
 
+# -- fused execution: the whole round loop is ONE device dispatch ------------
+# trueknn runs its multi-round expand-until-k search as a single jitted
+# lax.while_loop program: a 2-round and a 17-round search each cost
+# exactly one launch (plan tag fused/rounds<=N; fused=False keeps the
+# per-round host loop as the oracle).
+before = index.stats()["dispatches"]
+fres = index.query(qs, KnnSpec(k=5))
+print(
+    f"fused: {fres.n_rounds} rounds in "
+    f"{index.stats()['dispatches'] - before} dispatch "
+    f"(plan={fres.timings['plan']}, "
+    f"resolved_radius_p50={fres.timings['resolved_radius_p50']:.3g})"
+)
+
 # -- prepared plans: plan once, execute many ---------------------------------
 # index.query re-plans per call; a held QueryPlan amortizes route
 # construction and reuses compiled executables across batches (the
@@ -94,7 +108,7 @@ plan = index.prepare(KnnSpec(k=5))
 plan(qs)
 plan(qs + np.float32(0.002))
 print(
-    f"prepared plan: route={plan.explain()['route']} "
+    f"prepared plan: tag={plan.explain()['tag']} "  # fused/rounds<=64
     f"executable-cache {plan.cache_stats()['hits']} hits / "
     f"{plan.cache_stats()['misses']} misses over "
     f"{plan.cache_stats()['executions']} executions"

@@ -812,6 +812,14 @@ class ShardedIndex(NeighborIndex):
 
         t0 = time.perf_counter()
         q, self_ids = self._prep(queries)
+        if metric.name in ("l2", "l1", "linf") and q.shape[0] and \
+                self.n_points:
+            # raw-arithmetic metrics run the whole schedule on device;
+            # l2-view metrics (cosine) keep the per-round loop below —
+            # their radius mapping is host float64 arithmetic by contract
+            return self._execute_knn_placed_fused(
+                t0, q, self_ids, spec, metric, ctx
+            )
         q_total, n, s_total = q.shape[0], self.n_points, self.n_shards
         k = spec.k
         k_eff = k + (1 if self_ids is not None else 0)
@@ -917,6 +925,116 @@ class ShardedIndex(NeighborIndex):
         out.timings["shard_searches"] = searches
         return self._account(
             q_total, int(ever.sum()), t0, out, dispatches=dispatches
+        )
+
+    def _execute_knn_placed_fused(self, t0, q, self_ids, spec: KnnSpec,
+                                  metric: Metric, ctx=None) -> KNNResult:
+        """The shared-cut round loop as ONE device program: the radius
+        schedule, per-shard visit masks, candidate pools and the
+        resolution criterion all live inside a ``lax.while_loop`` on the
+        mesh (``PlacedFabric.fused_rounds``) — no host round-trip per
+        round, one fused dispatch per *batch*.  Answers are the host
+        loop's bit for bit: per-slot distances use the same arithmetic
+        contract, the cut is the same engine-exact compare, and the
+        merge's ascending (dist, index) order is exactly the
+        ``topk_merge_rows`` fold.  The device schedule runs in float32
+        (the host's is float64), which can shift *when* a query resolves
+        by a round — never *what* it answers, because a resolved pool is
+        provably the exact global top-k whatever cut resolved it."""
+        q_total, n, s_total = q.shape[0], self.n_points, self.n_shards
+        k = spec.k
+        k_eff = k + (1 if self_ids is not None else 0)
+        fab = self._fabric()
+        space, form = self._placed_route(metric, "knn")
+        bounds = self._bounds(q, metric)
+        cover = self._bounds_upper(q, metric).max(axis=1)
+        floor = bounds.min(axis=1)
+        seed = (
+            float(spec.start_radius)
+            if spec.start_radius is not None
+            else self._fused_seed(metric, ctx)
+        )
+        m_pad = q_total
+        if ctx is not None and ctx.canonical_shapes:
+            from ..plan import canonical_rows
+
+            m_pad = canonical_rows(q_total, self.MIN_SUBSET)
+            ctx.record_bucket(("placed-fused", form, k_eff, m_pad))
+        qp = np.zeros((m_pad, q.shape[1]), np.float32)
+        qp[:q_total] = q
+        sid = np.full((m_pad,), -1, np.int32)
+        if self_ids is not None:
+            sid[:q_total] = self_ids
+        b32 = np.zeros((m_pad, s_total), np.float32)
+        b32[:q_total] = bounds
+        fl = np.full((m_pad,), np.inf, np.float32)
+        fl[:q_total] = floor
+        cv = np.zeros((m_pad,), np.float32)
+        cv[:q_total] = cover
+        alive = np.zeros((m_pad,), bool)
+        alive[:q_total] = True
+        pool_d, pool_i, rr, radii, t_final = fab.fused_rounds(
+            space, form, qp, sid, b32, fl, cv, alive,
+            self._slot_gmaps(fab),
+            seed=seed, growth=self._growth, k_eff=k_eff,
+            self_mode=self_ids is not None, sentinel=n,
+        )
+        self._c["fused_dispatches"] += 1
+        pool_d, pool_i, rr = (
+            pool_d[:q_total], pool_i[:q_total], rr[:q_total]
+        )
+        # host-side round reconstruction, replaying the device's own
+        # float32 visit compares (numpy f32 <= == device f32 <=, IEEE)
+        rounds: list = []
+        ever = np.zeros((q_total, s_total), bool)
+        searches = 0
+        total_tests = 0
+        b32q = b32[:q_total]
+        for t in range(t_final):
+            r32 = np.float32(radii[t])
+            unres_t = rr >= t  # the forced final round resolves every row
+            visit_t = unres_t[:, None] & (b32q <= r32)
+            ever |= visit_t
+            searches += int(visit_t.sum())
+            self._placed_load += visit_t.sum(axis=0)
+            tests = int(m_pad) * n  # dense: every padded row, all slots
+            total_tests += tests
+            rounds.append(
+                RoundStats(
+                    t, float(r32), int(unres_t.sum()),
+                    int((rr == t).sum()), tests, (), 0, 0.0,
+                )
+            )
+        self._c["shard_rounds"] += t_final
+        self._c["shard_searches"] += searches
+        resolved_at = (
+            np.where(
+                rr >= 0,
+                np.asarray(radii, np.float64)[
+                    np.clip(rr, 0, max(t_final - 1, 0))
+                ],
+                np.nan,
+            )
+            if t_final
+            else np.full((q_total,), np.nan)
+        )
+        if self_ids is not None:
+            d, i = self._strip_self_knn(pool_d, pool_i, self_ids, k, n)
+        else:
+            d, i = pool_d[:, :k], pool_i[:, :k]
+        self._update_seed(resolved_at, metric, ctx)
+        out = KNNResult(
+            dists=d,
+            idxs=i,
+            n_tests=total_tests,
+            metric=metric.name,
+            found=np.isfinite(d).sum(axis=1).astype(np.int64),
+            rounds=rounds,
+            final_radius=rounds[-1].radius if rounds else None,
+        )
+        out.timings["shard_searches"] = searches
+        return self._account(
+            q_total, int(ever.sum()), t0, out, dispatches=1
         )
 
     def execute_hybrid(self, queries, spec: HybridSpec, metric: Metric,

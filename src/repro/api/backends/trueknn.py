@@ -39,6 +39,7 @@ import numpy as np
 
 from repro.core.brute import brute_knn_engine
 from repro.core.fixed_radius import fixed_radius_round
+from repro.core.fused_loop import build_schedule, fused_search
 from repro.core.grid import _next_pow2, build_grid
 from repro.core.result import KNNResult, RoundStats
 from repro.core.sampling import sample_start_radius
@@ -72,6 +73,11 @@ class TrueKNNIndex(NeighborIndex):
                    can't grow device memory without limit (64 — generous:
                    a normal radius schedule spans O(log(extent/r0)) lattice
                    points, well under the bound).
+      fused:       run kNN/hybrid as ONE on-device ``lax.while_loop``
+                   dispatch instead of one dispatch + host sync per round
+                   (True; see ``repro.core.fused_loop``).  ``fused=False``
+                   keeps the per-round host loop — the oracle the fused
+                   driver is bit-identical to.
 
     ``KnnSpec(start_radius=...)`` overrides the start radius explicitly
     (the old ``trueknn(start_radius=...)``); ``KnnSpec(stop_radius=...)``
@@ -97,11 +103,13 @@ class TrueKNNIndex(NeighborIndex):
         warm_pct: float = 25.0,
         warm_ema: float = 0.3,
         max_cached_grids: int = 64,
+        fused: bool = True,
     ):
         super().__init__(points)
         assert growth > 1.0, "radius growth factor must exceed 1"
         self._pts_j = jnp.asarray(self._pts)
         self._growth = float(growth)
+        self._fused = bool(fused)
         self._max_rounds = int(max_rounds)
         self._chunk = int(chunk)
         self._seed = int(seed)
@@ -126,6 +134,7 @@ class TrueKNNIndex(NeighborIndex):
         self._j_cap: Optional[int] = None  # lattice index of the 1-cell grid
         self._warm_r: Optional[float] = None  # resolved-radius EMA
         self._sampled_r: Optional[float] = None  # Alg. 2 result (per cloud)
+        self._probe_cache: dict = {}  # grid table-sizing probe memo
 
         self._c = {
             "batches": 0,
@@ -134,6 +143,7 @@ class TrueKNNIndex(NeighborIndex):
             "grid_cache_hits": 0,
             "rounds": 0,
             "brute_tail_queries": 0,
+            "dispatches": 0,  # device program launches (fused round loops = 1)
         }
 
     # -- radius lattice & grid cache --------------------------------------
@@ -155,7 +165,7 @@ class TrueKNNIndex(NeighborIndex):
         radius lattice.  Returns (grid, cache_hit)."""
         if not self._cache_grids:
             self._c["grid_builds"] += 1
-            return build_grid(self._pts, r), False
+            return build_grid(self._pts, r, probe_cache=self._probe_cache), False
         j = min(self._lattice_j(r), self._j_cap)
         g = self._grids.pop(j, None)
         if g is not None:
@@ -167,7 +177,7 @@ class TrueKNNIndex(NeighborIndex):
         build_r = self._anchor * self._growth**j
         if j < self._j_cap:
             build_r = max(build_r, r)
-        g = build_grid(self._pts, build_r)
+        g = build_grid(self._pts, build_r, probe_cache=self._probe_cache)
         self._grids[j] = g
         self._c["grid_builds"] += 1
         while len(self._grids) > self._max_cached_grids:
@@ -205,6 +215,15 @@ class TrueKNNIndex(NeighborIndex):
 
     # -- the hot path ------------------------------------------------------
 
+    def plan_details(self, spec, metric: Metric) -> tuple:
+        if self._fused and isinstance(spec, (KnnSpec, HybridSpec)):
+            return (
+                f"fused/rounds<={self._max_rounds}",
+                {"fused": True, "max_rounds": self._max_rounds},
+                [],
+            )
+        return super().plan_details(spec, metric)
+
     def execute_knn(self, queries, spec: KnnSpec, metric: Metric,
                     ctx=None) -> KNNResult:
         return self._run_knn(
@@ -214,6 +233,7 @@ class TrueKNNIndex(NeighborIndex):
             stop_radius=spec.stop_radius,
             metric_name=metric.name,
             shared_radius=None if ctx is None else ctx.warm_radius,
+            ctx=ctx,
         )
 
     def execute_hybrid(self, queries, spec: HybridSpec, metric: Metric,
@@ -228,6 +248,7 @@ class TrueKNNIndex(NeighborIndex):
             stop_radius=spec.radius,
             cap_exact=True,
             metric_name=metric.name,
+            ctx=ctx,
         )
 
     def execute_range(self, queries, spec: RangeSpec, metric: Metric,
@@ -256,6 +277,7 @@ class TrueKNNIndex(NeighborIndex):
                 self._pts_j, grid, q, qid, r, int(k), chunk=self._chunk
             )
             self._c["rounds"] += 1
+            self._c["dispatches"] += 1
             return (
                 np.sqrt(np.asarray(d2)),
                 np.asarray(idx),
@@ -287,6 +309,7 @@ class TrueKNNIndex(NeighborIndex):
         cap_exact: bool = False,
         metric_name: str = "l2",
         shared_radius: Optional[float] = None,
+        ctx=None,
     ) -> KNNResult:
         t_call = time.perf_counter()
         n, d = self._pts.shape
@@ -314,6 +337,15 @@ class TrueKNNIndex(NeighborIndex):
         if self._anchor is None:
             self._set_anchor(r)
         r0 = r
+
+        if self._fused and q_total and n:
+            res = self._run_knn_fused(
+                q_all, qid_all, k, r0, r_source,
+                stop_radius=stop_radius, cap_exact=cap_exact,
+                metric_name=metric_name, ctx=ctx, t_call=t_call,
+            )
+            if res is not None:
+                return res
 
         out_d = np.full((q_total, k), np.inf, dtype=np.float32)
         out_i = np.full((q_total, k), n, dtype=np.int32)
@@ -355,6 +387,7 @@ class TrueKNNIndex(NeighborIndex):
             d2, idx, found, tests = fixed_radius_round(
                 self._pts_j, grid, q, qid, r, k, chunk=min(self._chunk, m_pad)
             )
+            self._c["dispatches"] += 1
             d2 = np.asarray(d2[:m])
             idx = np.asarray(idx[:m])
             found = np.asarray(found[:m])
@@ -411,6 +444,7 @@ class TrueKNNIndex(NeighborIndex):
             bd, bi, btests = brute_knn_engine(
                 self._pts_j, k, queries=q_all[alive], query_ids=qid_all[alive]
             )
+            self._c["dispatches"] += 1
             bd = np.asarray(bd)
             bi = np.asarray(bi)
             if cap_exact:
@@ -436,18 +470,7 @@ class TrueKNNIndex(NeighborIndex):
             )
             alive = np.empty((0,), dtype=np.int64)
 
-        # warm-start update: EMA of a low percentile of the radii at which
-        # queries resolved (brute-tail queries carry no radius information)
-        fin = resolved_at[np.isfinite(resolved_at)]
-        if self._warm_start and fin.size:
-            target = float(np.percentile(fin, self._warm_pct))
-            if self._warm_r is None:
-                self._warm_r = target
-            else:
-                self._warm_r = (
-                    (1.0 - self._warm_ema) * self._warm_r
-                    + self._warm_ema * target
-                )
+        p50 = self._update_warm(resolved_at)
 
         n_builds = sum(1 for rs in rounds if np.isfinite(rs.radius) and not rs.cache_hit)
         n_hits = sum(1 for rs in rounds if rs.cache_hit)
@@ -470,6 +493,150 @@ class TrueKNNIndex(NeighborIndex):
                 "grid_cache_hits": n_hits,
                 "start_radius_source": r_source,
                 "warm_start_radius": r0 if r_source == "warm" else None,
+                "resolved_radius_p50": p50,
+            },
+            start_radius=r0,
+            final_radius=rounds[-1].radius if rounds else r0,
+        )
+
+    def _update_warm(self, resolved_at: np.ndarray) -> Optional[float]:
+        """Warm-start update: EMA of a low percentile of the radii at which
+        queries resolved (brute-tail queries carry no radius information).
+        Returns the distribution's p50 for serving telemetry (host-side —
+        no extra device sync)."""
+        fin = resolved_at[np.isfinite(resolved_at)]
+        if not fin.size:
+            return None
+        if self._warm_start:
+            target = float(np.percentile(fin, self._warm_pct))
+            if self._warm_r is None:
+                self._warm_r = target
+            else:
+                self._warm_r = (
+                    (1.0 - self._warm_ema) * self._warm_r
+                    + self._warm_ema * target
+                )
+        return float(np.percentile(fin, 50.0))
+
+    def _run_knn_fused(
+        self,
+        q_all: np.ndarray,
+        qid_all: np.ndarray,
+        k: int,
+        r0: float,
+        r_source: str,
+        *,
+        stop_radius: Optional[float],
+        cap_exact: bool,
+        metric_name: str,
+        ctx,
+        t_call: float,
+    ) -> Optional[KNNResult]:
+        """One-dispatch driver: schedule on host, loop on device, then
+        reconstruct the host driver's exact bookkeeping (rounds, warm EMA,
+        counters) from the loop carry.  Returns None for schedules the
+        device loop cannot improve (zero rounds) — the host loop handles
+        those verbatim."""
+        n = self.n_points
+        q_total = q_all.shape[0]
+        t0 = time.perf_counter()
+        sched = build_schedule(
+            self, r0, stop_radius=stop_radius, cap_exact=cap_exact
+        )
+        t_build = time.perf_counter() - t0
+        if not sched.radii:
+            return None
+        fr = fused_search(
+            self._pts_j, sched, q_all, qid_all, k, chunk=self._chunk
+        )
+        self._c["dispatches"] += 1
+
+        out_d, out_i = fr.dists, fr.idxs
+        found_all = fr.found.astype(np.int64)
+        unres = fr.unresolved  # pre-tail mask
+        rr = fr.resolved_round
+        t_final = fr.n_executed
+        n_tail = int(unres.sum())
+        tail_ran = sched.tail_mode != "none" and n_tail > 0
+        if tail_ran:
+            # the device tail replaced unresolved rows with the exact
+            # unbounded oracle answer; the hybrid re-cut and the found
+            # recount are the same host-side post-filters the host driver
+            # applies to its brute tail
+            if cap_exact:
+                from ..planner import apply_radius_cut
+
+                bd, bi, bfound = apply_radius_cut(
+                    out_d[unres], out_i[unres], stop_radius, n
+                )
+                out_d[unres] = bd
+                out_i[unres] = bi
+                found_all[unres] = bfound
+            else:
+                found_all[unres] = np.isfinite(out_d[unres]).sum(1)
+            self._c["brute_tail_queries"] += n_tail
+
+        radii = np.asarray(sched.radii, np.float64)
+        alive_forever = rr < 0
+        rounds = []
+        total_tests = 0
+        for t in range(t_final):
+            m = int(np.sum(alive_forever | (rr >= t)))
+            n_res = int(np.sum(rr == t))
+            tests_t = int(fr.tests[t])
+            g = sched.grids[t]
+            rounds.append(
+                RoundStats(t, float(radii[t]), m, n_res, tests_t,
+                           g.res, g.cap, 0.0,
+                           cache_hit=sched.cache_hits[t])
+            )
+            total_tests += tests_t
+        if tail_ran:
+            btests = n_tail * n
+            rounds.append(
+                RoundStats(t_final, float("inf"), n_tail, n_tail, btests,
+                           (), 0, 0.0)
+            )
+            total_tests += btests
+
+        resolved_at = np.where(
+            rr >= 0, radii[np.clip(rr, 0, len(radii) - 1)], np.nan
+        )
+        p50 = self._update_warm(resolved_at)
+
+        n_builds = sum(
+            1 for rs in rounds
+            if np.isfinite(rs.radius) and not rs.cache_hit
+        )
+        n_hits = sum(1 for rs in rounds if rs.cache_hit)
+        self._c["batches"] += 1
+        self._c["queries_served"] += q_total
+        self._c["rounds"] += len(rounds)
+
+        if ctx is not None and getattr(ctx, "canonical_shapes", False):
+            ctx.record_bucket(
+                ("fused", "hybrid" if cap_exact else "knn", k, fr.q_pad,
+                 sched.signature())
+            )
+
+        return KNNResult(
+            dists=out_d,
+            idxs=out_i,
+            n_tests=total_tests,
+            backend=self.backend_name,
+            metric=metric_name,
+            found=found_all,
+            rounds=rounds,
+            timings={
+                "query_seconds": time.perf_counter() - t_call,
+                "grid_build_seconds": t_build,
+                "grid_builds": n_builds,
+                "grid_cache_hits": n_hits,
+                "start_radius_source": r_source,
+                "warm_start_radius": r0 if r_source == "warm" else None,
+                "plan": f"fused/rounds<={len(sched.radii)}",
+                "fused_dispatches": 1,
+                "resolved_radius_p50": p50,
             },
             start_radius=r0,
             final_radius=rounds[-1].radius if rounds else r0,
@@ -480,4 +647,7 @@ class TrueKNNIndex(NeighborIndex):
         s.update(self._c)
         s["cached_grids"] = len(self._grids)
         s["warm_radius"] = self._warm_r
+        s["fused"] = self._fused
+        s["grid_probe_hits"] = int(self._probe_cache.get("_hits", 0))
+        s["grid_probe_misses"] = int(self._probe_cache.get("_misses", 0))
         return s

@@ -305,7 +305,7 @@ class _Meter:
 
     __slots__ = ("requests", "rows", "batches", "batch_rows", "batch_hist",
                  "latencies", "cache_hits", "cache_misses", "rejected",
-                 "reordered_batches")
+                 "reordered_batches", "resolved_radii")
 
     def __init__(self):
         self.requests = 0
@@ -318,13 +318,20 @@ class _Meter:
         self.cache_misses = 0
         self.rejected = 0
         self.reordered_batches = 0
+        # per-batch median resolved radii from the fused round loop's
+        # carry — already on the host in the result timings, so tracking
+        # them costs no extra device sync
+        self.resolved_radii: deque = deque(maxlen=self.LATENCY_WINDOW)
 
-    def record_batch(self, n_rows: int, *, reordered: bool = False) -> None:
+    def record_batch(self, n_rows: int, *, reordered: bool = False,
+                     resolved_radius_p50=None) -> None:
         self.batches += 1
         self.batch_rows += n_rows
         self.batch_hist[int(n_rows)] = self.batch_hist.get(int(n_rows), 0) + 1
         if reordered:
             self.reordered_batches += 1
+        if resolved_radius_p50 is not None:
+            self.resolved_radii.append(float(resolved_radius_p50))
 
     def summary(self, queue_depth: int) -> dict:
         lat = np.asarray(self.latencies, np.float64)
@@ -349,6 +356,13 @@ class _Meter:
             ),
             "rejected": self.rejected,
             "reordered_batches": self.reordered_batches,
+            "resolved_radius_p50": (
+                round(float(np.percentile(
+                    np.asarray(self.resolved_radii, np.float64), 50
+                )), 6)
+                if self.resolved_radii
+                else None
+            ),
             "queue_depth": queue_depth,
         }
 
@@ -1065,7 +1079,8 @@ class NeighborServer:
                 ticket._asm["batch_sizes"].append(m)
                 tickets.add(ticket)
             self._meter(name, spec, metric).record_batch(
-                m, reordered=reordered
+                m, reordered=reordered,
+                resolved_radius_p50=res.timings.get("resolved_radius_p50"),
             )
             for ticket in tickets:
                 if ticket._rows_left == 0:

@@ -215,6 +215,29 @@ def distributed_trueknn(
 PLACED_FORMS = ("sq_l2", "l1", "l1_acc", "linf")
 
 
+def _slot_form_dists(form: str, blk, q):
+    """Raw-form (Qp, B) distances of one slot block against the query
+    batch — THE arithmetic contract of the placed paths.  Both the
+    per-round fused dispatch and the fused round loop call exactly this,
+    so their candidate orders agree bit for bit with each other and with
+    the host engine each form transcribes (see ``PLACED_FORMS``)."""
+    B = blk.shape[0]
+    if form == "sq_l2":
+        diff = q[:, None, :] - blk[None, :, :]
+        return jnp.sum(diff * diff, -1)
+    if form == "l1":
+        ad = jnp.abs(q[:, None, :] - blk[None, :, :])
+        return jnp.sum(ad, axis=-1)
+    if form == "linf":
+        ad = jnp.abs(q[:, None, :] - blk[None, :, :])
+        return jnp.max(ad, -1)
+    # l1_acc: the kernel's per-axis accumulation order
+    dist = jnp.zeros((q.shape[0], B), jnp.float32)
+    for a in range(q.shape[1]):
+        dist = dist + jnp.abs(q[:, a][:, None] - blk[:, a][None, :])
+    return dist
+
+
 class PlacedFabric:
     """Per-shard point blocks pinned to mesh devices, one fused dispatch.
 
@@ -327,19 +350,7 @@ class PlacedFabric:
         def one_slot(blk, nv, vm, q, thr):
             # blk (B, dim) zero-padded rows; nv () valid-row count;
             # vm (Qp,) this slot's visit mask; q (Qp, dim); thr () f32
-            if form == "sq_l2":
-                diff = q[:, None, :] - blk[None, :, :]
-                dist = jnp.sum(diff * diff, -1)
-            elif form == "l1":
-                ad = jnp.abs(q[:, None, :] - blk[None, :, :])
-                dist = jnp.sum(ad, axis=-1)
-            elif form == "linf":
-                ad = jnp.abs(q[:, None, :] - blk[None, :, :])
-                dist = jnp.max(ad, -1)
-            else:  # l1_acc: the kernel's per-axis accumulation order
-                dist = jnp.zeros((q.shape[0], B), jnp.float32)
-                for a in range(q.shape[1]):
-                    dist = dist + jnp.abs(q[:, a][:, None] - blk[:, a][None, :])
+            dist = _slot_form_dists(form, blk, q)
             keep = (jnp.arange(B, dtype=jnp.int32)[None, :] < nv) & vm[:, None]
             dist = jnp.where(keep, dist, jnp.inf)
             cnt = jnp.sum((dist <= thr) & keep, axis=1, dtype=jnp.int32)
@@ -402,6 +413,221 @@ class PlacedFabric:
         )
         self.dispatches += 1
         return np.asarray(d), np.asarray(idx), np.asarray(cnt)
+
+    # -- the fused round loop ----------------------------------------------
+
+    @functools.lru_cache(maxsize=None)  # noqa: B019 — lives with the fabric
+    def _fused_rounds_fn(self, form: str, k_eff: int, self_mode: bool,
+                         max_rounds: int, sentinel: int):
+        """Jitted shard_map program for the WHOLE shared-cut radius
+        schedule: a ``lax.while_loop`` whose carry (candidate pool,
+        unresolved mask, radius, resolution log) is replicated across the
+        mesh, with only the per-slot block distances sharded — one device
+        program per batch however many rounds the schedule takes.
+
+        The slot layout (shard ids, valid counts, global-index lookups)
+        and every schedule parameter (seed, growth, per-query floors and
+        cover bounds) are *traced data*, so a rebalance — which moves rows
+        between slots but never changes shapes — reuses the compiled
+        executable.  The cache key is the static skeleton only."""
+        assert form in ("sq_l2", "l1", "linf"), form
+        axis = self._axis
+        B = self.block_rows
+        n_slots = self.n_slots
+        kk = min(k_eff, B)
+
+        def local(blocks, nvalid, shards, gmaps, q, sid, bounds, floors,
+                  cover, alive0, params):
+            # blocks (g, B, dim) / nvalid (g,) / shards (g,) / gmaps
+            # (g, B+1) are this device's slot group; everything else is
+            # replicated, so the carry updates below compute identically
+            # on every device — only the slot distances are sharded, and
+            # ``all_gather`` re-replicates their lists each round.
+            seed, growth, cover_max = params[0, 0], params[0, 1], params[0, 2]
+            Qp = q.shape[0]
+            S = bounds.shape[1]
+
+            def round_lists(r, unres):
+                # one fused round at cut r: per-slot dense top-k of the
+                # visited rows, the engine-exact radius cut, then the
+                # global-order merge — op for op the host placed round
+                # (``topk`` + ``_placed_cutmap`` + ``topk_merge_rows``)
+                thr = r * r if form == "sq_l2" else r
+
+                def one(blk, nv, sh, gm):
+                    dist = _slot_form_dists(form, blk, q)
+                    vm = (
+                        unres
+                        & (sh >= 0)
+                        & (bounds[:, jnp.clip(sh, 0, S - 1)] <= r)
+                    )
+                    keep = (
+                        jnp.arange(B, dtype=jnp.int32)[None, :] < nv
+                    ) & vm[:, None]
+                    dist = jnp.where(keep, dist, jnp.inf)
+                    neg, idx = jax.lax.top_k(-dist, kk)
+                    d = -neg
+                    kp = d <= thr
+                    dm = jnp.where(
+                        kp,
+                        jnp.sqrt(d) if form == "sq_l2" else d,
+                        jnp.inf,
+                    ).astype(jnp.float32)
+                    gi = jnp.where(kp, gm[idx], sentinel).astype(jnp.int32)
+                    if kk < k_eff:
+                        dm = jnp.concatenate(
+                            [dm, jnp.full((Qp, k_eff - kk), jnp.inf,
+                                          jnp.float32)], 1
+                        )
+                        gi = jnp.concatenate(
+                            [gi, jnp.full((Qp, k_eff - kk), sentinel,
+                                          jnp.int32)], 1
+                        )
+                    return dm, gi
+
+                dg, ig = jax.vmap(one)(blocks, nvalid, shards, gmaps)
+                da = jax.lax.all_gather(dg, axis).reshape(
+                    n_slots, Qp, k_eff
+                )
+                ia = jax.lax.all_gather(ig, axis).reshape(
+                    n_slots, Qp, k_eff
+                )
+                d_all = jnp.transpose(da, (1, 0, 2)).reshape(
+                    Qp, n_slots * k_eff
+                )
+                i_all = jnp.transpose(ia, (1, 0, 2)).reshape(
+                    Qp, n_slots * k_eff
+                )
+                # ascending (dist, global idx) prefix == the sequential
+                # ``topk_merge_rows`` fold (lexicographic top-k is
+                # associative; each global index lives in exactly one slot)
+                sd, si = jax.lax.sort((d_all, i_all), num_keys=2)
+                return sd[:, :k_eff], si[:, :k_eff]
+
+            def body(carry):
+                pool_d, pool_i, unres, r, t, res_round, radii = carry
+                pend = jnp.where(
+                    unres & jnp.isfinite(floors), floors, jnp.inf
+                )
+                mn = jnp.min(pend)
+                base = jnp.where(jnp.isfinite(mn), mn, jnp.float32(0.0))
+                r1 = jnp.where(
+                    t == 0,
+                    jnp.maximum(jnp.maximum(seed, base), jnp.float32(1e-12)),
+                    jnp.maximum(r * growth, base),
+                )
+                # the last allowed round forces the cut past every cover
+                # bound: the pool is then provably complete and every row
+                # resolves, so a float32 growth stall can't spin forever
+                r1 = jnp.where(
+                    t >= max_rounds - 1, jnp.maximum(r1, cover_max), r1
+                )
+                nd, ni = round_lists(r1, unres)
+                # REPLACE unresolved rows (the round is complete within
+                # its cut; merging smaller-cut pools would duplicate)
+                pool_d = jnp.where(unres[:, None], nd, pool_d)
+                pool_i = jnp.where(unres[:, None], ni, pool_i)
+                if self_mode:
+                    has_self = (pool_i == sid[:, None]).any(axis=1)
+                    kth = jnp.where(
+                        has_self, pool_d[:, k_eff - 1], pool_d[:, k_eff - 2]
+                    )
+                else:
+                    kth = pool_d[:, k_eff - 1]
+                resolved = unres & ((kth <= r1) | (r1 >= cover))
+                res_round = jnp.where(resolved, t, res_round)
+                radii = radii.at[t].set(r1)
+                return (pool_d, pool_i, unres & ~resolved, r1,
+                        t + 1, res_round, radii)
+
+            init = (
+                jnp.full((Qp, k_eff), jnp.inf, jnp.float32),
+                jnp.full((Qp, k_eff), sentinel, jnp.int32),
+                alive0,
+                jnp.float32(0.0),
+                jnp.int32(0),
+                jnp.full((Qp,), -1, jnp.int32),
+                jnp.zeros((max_rounds,), jnp.float32),
+            )
+            pool_d, pool_i, _, _, t, res_round, radii = jax.lax.while_loop(
+                lambda c: (c[4] < max_rounds) & jnp.any(c[2]), body, init
+            )
+            # replicated results leave through a tiled leading slot axis
+            # (check_rep=False: out_specs must mention the mesh axis);
+            # the host wrapper takes [0]
+            return (
+                pool_d[None], pool_i[None], res_round[None], radii[None],
+                jnp.reshape(t, (1,)),
+            )
+
+        from jax.experimental.shard_map import shard_map
+
+        fn = shard_map(
+            local,
+            mesh=self.mesh,
+            in_specs=(
+                P(axis, None, None),  # blocks
+                P(axis),              # valid-row counts
+                P(axis),              # shard id per slot
+                P(axis, None),        # global-index lookup per slot
+                P(None, None),        # queries
+                P(None),              # self ids
+                P(None, None),        # (Qp, S) shard lower bounds
+                P(None),              # per-query floor (nearest shard)
+                P(None),              # per-query cover (cloud covered)
+                P(None),              # initially-unresolved mask
+                P(None, None),        # (seed, growth, cover_max)
+            ),
+            out_specs=(
+                P(axis, None, None), P(axis, None, None),
+                P(axis, None), P(axis, None), P(axis),
+            ),
+            check_rep=False,
+        )
+        return jax.jit(fn)
+
+    def fused_rounds(self, space: str, form: str, queries, self_ids,
+                     bounds, floors, cover, alive0, slot_gmaps, *,
+                     seed: float, growth: float, k_eff: int,
+                     self_mode: bool, sentinel: int, max_rounds: int = 64):
+        """Run the WHOLE shared-cut round schedule as ONE device program.
+
+        queries (Qp, dim) f32; self_ids (Qp,) global id or -1; bounds
+        (Qp, n_shards) f32 deflated lower bounds; floors/cover (Qp,) f32;
+        alive0 (Qp,) bool — padding rows False (they never search);
+        slot_gmaps: per-slot (block_rows + 1,) local-row -> global-index
+        lookups (row ``block_rows`` = ``sentinel``).
+
+        Returns host arrays ``(pool_d (Qp, k_eff) mapped dists, pool_i
+        (Qp, k_eff) global idxs, res_round (Qp,) resolution round or -1,
+        radii (n_executed,) the schedule actually run, n_executed)``.
+        """
+        q = np.ascontiguousarray(queries, np.float32)
+        sid = np.ascontiguousarray(self_ids, np.int32)
+        b32 = np.ascontiguousarray(bounds, np.float32)
+        fl32 = np.ascontiguousarray(floors, np.float32)
+        cv32 = np.ascontiguousarray(cover, np.float32)
+        al = np.ascontiguousarray(alive0, bool)
+        cover_max = float(cv32[al].max()) if al.any() else 0.0
+        shard_of = np.asarray([s for s, _, _ in self.slots], np.int32)
+        gmaps = np.ascontiguousarray(np.stack(slot_gmaps), np.int32)
+        params = np.asarray(
+            [[seed, growth, cover_max]], np.float32
+        )
+        fn = self._fused_rounds_fn(
+            form, int(k_eff), bool(self_mode), int(max_rounds),
+            int(sentinel),
+        )
+        pd, pi, rr, radii, t = fn(
+            self._placed_blocks(space), self._placed_nvalid(), shard_of,
+            gmaps, q, sid, b32, fl32, cv32, al, params,
+        )
+        self.dispatches += 1
+        n_exec = int(np.asarray(t)[0])
+        return (
+            np.array(pd[0]), np.array(pi[0]), np.array(rr[0]),
+            np.array(radii[0][:n_exec]), n_exec,
+        )
 
     # -- load spreading ----------------------------------------------------
 

@@ -33,6 +33,71 @@ def _pad_points(points: jax.Array) -> jax.Array:
     return jnp.concatenate([points, sentinel], axis=0)
 
 
+def _chunk_candidates(
+    points_padded,  # (N+1, d) with +inf sentinel row
+    buckets,  # (H, cap)
+    point_cells,  # (N+1, d) int32 cell coords, sentinel row -2
+    origin,
+    inv_cell,
+    res_arr,  # (d,) int32, dynamic virtual resolution
+    offs,  # (S, d) stencil offsets
+    q,  # (chunk, d), padded queries have +inf coords
+    qid,  # (chunk,) int32
+    r2,  # scalar squared radius
+    *,
+    table_size: int,
+    k: int,
+):
+    """One chunk of grid-stencil candidate search: gather the one-ring
+    stencil's bucket contents, score squared distances, keep the k best
+    within ``r2``.  Shared by the per-round host driver (``_round_impl``)
+    and the fused multi-round loop (``repro.core.fused_loop``) so both
+    trace the *same* ops — bit-identity between them holds by
+    construction, not by tolerance.
+
+    Returns ``(top_d2 (chunk, k), top_i (chunk, k), found (chunk,),
+    valid (chunk, n_cand))`` — ``valid`` is the per-candidate
+    distance-evaluation mask the caller reduces into its n_tests counter.
+    """
+    from .grid import cell_coords_of, hash_coords
+
+    n = points_padded.shape[0] - 1
+    cap = buckets.shape[1]
+    chunk = q.shape[0]
+    n_cand = offs.shape[0] * cap
+
+    qfin = jnp.where(jnp.isfinite(q), q, 0.0)  # keep pad-query math finite
+    coords = cell_coords_of(qfin, origin, inv_cell, res_arr)
+    nbr = coords[:, None, :] + offs[None, :, :]  # (chunk, S, d)
+    in_range = jnp.all((nbr >= 0) & (nbr < res_arr), axis=-1)  # (chunk, S)
+    h = hash_coords(nbr, table_size)  # (chunk, S)
+    # candidate point indices, (chunk, S*cap); out-of-range cells -> N
+    cand = jnp.where(in_range[..., None], buckets[h], n)
+    # exact cell-coord match kills hash collisions (and duplicates): the
+    # integer compare is our ray-AABB test analogue.
+    ccell = point_cells[cand]  # (chunk, S, cap, d)
+    match = jnp.all(ccell == nbr[:, :, None, :], axis=-1)
+    cand = jnp.where(match, cand, n).reshape(chunk, n_cand)
+    cpts = points_padded[cand]  # (chunk, n_cand, d)
+    diff = cpts - q[:, None, :]
+    d2 = jnp.sum(diff * diff, axis=-1)
+    d2 = jnp.nan_to_num(d2, nan=jnp.inf, posinf=jnp.inf)
+    valid = (cand < n) & jnp.isfinite(q[:, :1])  # pad queries don't count
+    not_self = cand != qid[:, None]
+    within = valid & not_self & (d2 <= r2)
+    found = jnp.sum(within, axis=-1)  # (chunk,)
+    d2m = jnp.where(within, d2, jnp.inf)
+    kk = min(k, n_cand)
+    neg_top, arg = jax.lax.top_k(-d2m, kk)
+    top_d = -neg_top
+    top_i = jnp.take_along_axis(cand, arg, axis=-1)
+    top_i = jnp.where(jnp.isfinite(top_d), top_i, n)
+    if kk < k:
+        top_d = jnp.pad(top_d, ((0, 0), (0, k - kk)), constant_values=jnp.inf)
+        top_i = jnp.pad(top_i, ((0, 0), (0, k - kk)), constant_values=n)
+    return top_d, top_i, found, valid
+
+
 @partial(jax.jit, static_argnames=("table_size", "k", "chunk"))
 def _round_impl(
     points_padded,  # (N+1, d) with +inf sentinel row
@@ -49,50 +114,19 @@ def _round_impl(
     k: int,
     chunk: int,
 ):
-    from .grid import cell_coords_of, hash_coords
-
-    n = points_padded.shape[0] - 1
     d = points_padded.shape[1]
-    cap = buckets.shape[1]
     offs = jnp.asarray(stencil_offsets(d))  # (S, d)
-    s = offs.shape[0]
 
     q_total = queries.shape[0]
     assert q_total % chunk == 0
-    n_cand = s * cap
 
     def one_chunk(carry, inp):
         q, qid = inp  # (chunk, d), (chunk,)
-        qfin = jnp.where(jnp.isfinite(q), q, 0.0)  # keep pad-query math finite
-        coords = cell_coords_of(qfin, origin, inv_cell, res_arr)
-        nbr = coords[:, None, :] + offs[None, :, :]  # (chunk, S, d)
-        in_range = jnp.all((nbr >= 0) & (nbr < res_arr), axis=-1)  # (chunk, S)
-        h = hash_coords(nbr, table_size)  # (chunk, S)
-        # candidate point indices, (chunk, S*cap); out-of-range cells -> N
-        cand = jnp.where(in_range[..., None], buckets[h], n)
-        # exact cell-coord match kills hash collisions (and duplicates): the
-        # integer compare is our ray-AABB test analogue.
-        ccell = point_cells[cand]  # (chunk, S, cap, d)
-        match = jnp.all(ccell == nbr[:, :, None, :], axis=-1)
-        cand = jnp.where(match, cand, n).reshape(chunk, n_cand)
-        cpts = points_padded[cand]  # (chunk, n_cand, d)
-        diff = cpts - q[:, None, :]
-        d2 = jnp.sum(diff * diff, axis=-1)
-        d2 = jnp.nan_to_num(d2, nan=jnp.inf, posinf=jnp.inf)
-        valid = (cand < n) & jnp.isfinite(q[:, :1])  # pad queries don't count
-        not_self = cand != qid[:, None]
+        top_d, top_i, found, valid = _chunk_candidates(
+            points_padded, buckets, point_cells, origin, inv_cell, res_arr,
+            offs, q, qid, r2, table_size=table_size, k=k,
+        )
         tests = jnp.sum(valid, dtype=jnp.float32)  # distance evals this chunk
-        within = valid & not_self & (d2 <= r2)
-        found = jnp.sum(within, axis=-1)  # (chunk,)
-        d2m = jnp.where(within, d2, jnp.inf)
-        kk = min(k, n_cand)
-        neg_top, arg = jax.lax.top_k(-d2m, kk)
-        top_d = -neg_top
-        top_i = jnp.take_along_axis(cand, arg, axis=-1)
-        top_i = jnp.where(jnp.isfinite(top_d), top_i, n)
-        if kk < k:
-            top_d = jnp.pad(top_d, ((0, 0), (0, k - kk)), constant_values=jnp.inf)
-            top_i = jnp.pad(top_i, ((0, 0), (0, k - kk)), constant_values=n)
         return carry, (top_d, top_i, found, tests)
 
     qs = queries.reshape(-1, chunk, d)

@@ -1,0 +1,342 @@
+"""Fused on-device radius-growth loop — one XLA dispatch per TrueKNN search.
+
+The host driver (``repro.api.backends.trueknn._run_knn``) runs the paper's
+expand-until-k iteration on the host: every round is a separate device
+dispatch followed by a host sync for the convergence check.  That is the
+repeated-launch tax RTNN identifies as the dominant cost of re-running
+traversal setup.  This module moves the whole round loop into a single
+jitted program:
+
+* ``build_schedule`` transcribes the host driver's *control flow* — the
+  radius sequence is data-independent (geometric growth, stop/cap
+  handling, the brute-equivalent guard, the 4x-extent clamp), so the
+  rounds the device loop may need are known up front, and each round's
+  lattice-snapped grid comes from the index's existing grid cache.
+* ``fused_search`` runs one ``jax.lax.while_loop`` whose carry holds the
+  per-query best-k heap, an on-device unresolved mask, per-round test
+  counters and the resolution round per query.  The predicate reduces the
+  unresolved mask *on device*; each round body is the same
+  ``_chunk_candidates`` scan the per-round host driver traces, selected by
+  ``lax.switch`` over the deduped per-grid branches, with the squared
+  radius as traced data.  An optional brute tail (``_brute_impl``, the
+  exact oracle) runs under ``lax.cond`` only if queries remain unresolved.
+
+Because the loop body and the tail call the *same* jitted subroutines as
+the host driver on the same operands, answers are bit-identical to the
+host loop by construction — not by tolerance.  The only host<->device
+traffic per search is the final result fetch: one dispatch however many
+rounds run.
+
+Caveat: queries with non-finite coordinates are treated as padding by the
+fused driver (they can never resolve, and a mask that can never clear
+would keep the while-loop spinning); the host driver (``fused=False``)
+remains the oracle for such pathological rows.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .brute import _brute_impl
+from .fixed_radius import _chunk_candidates, _pad_points
+from .grid import _next_pow2, stencil_offsets
+
+__all__ = ["FusedSchedule", "FusedResult", "build_schedule", "fused_search"]
+
+
+def _floor_pow2(x: int) -> int:
+    return 1 << max(0, int(x).bit_length() - 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedSchedule:
+    """The data-independent round plan of one fused search.
+
+    ``radii[t]`` is round t's search radius and ``grids[t]`` its
+    lattice-snapped grid (grids repeat once the lattice cap is reached —
+    the device program dedupes them into ``lax.switch`` branches).
+    ``tail_mode`` says what finishes still-unresolved queries after the
+    last round: ``"plain"`` (exact brute tail, unbounded — stop_radius is
+    None or the brute-equivalent guard fired), ``"capped"`` (brute tail
+    re-cut at the hybrid cap), or ``"none"`` (stop_radius tails keep
+    their partial lists).
+    """
+
+    radii: tuple
+    grids: tuple
+    cache_hits: tuple
+    tail_mode: str
+    stop_radius: object  # Optional[float]
+
+    def signature(self) -> tuple:
+        """Shape-defining key of the compiled fused program (executable-
+        cache bucketing): round count, per-round grid shapes, tail form."""
+        return (
+            len(self.radii),
+            tuple((g.table_size, g.cap) for g in self.grids),
+            self.tail_mode,
+        )
+
+
+@dataclasses.dataclass
+class FusedResult:
+    """Raw device outputs of one fused search (host numpy, post-fetch).
+
+    ``dists`` are true L2 (sqrt applied on device); ``unresolved`` is the
+    pre-tail mask (rows the while-loop could not resolve); ``tests[t]``
+    counts candidate distance evaluations charged to round t;
+    ``n_executed`` is how many scheduled rounds actually ran before the
+    on-device predicate cleared.
+    """
+
+    dists: np.ndarray  # (Q, k) float32
+    idxs: np.ndarray  # (Q, k) int32
+    found: np.ndarray  # (Q,) int32
+    unresolved: np.ndarray  # (Q,) bool, pre-tail
+    resolved_round: np.ndarray  # (Q,) int32, -1 = never in-loop
+    tests: np.ndarray  # (n_sched,) float64
+    n_executed: int
+    q_pad: int
+
+
+def build_schedule(index, r0: float, *, stop_radius=None,
+                   cap_exact: bool = False) -> FusedSchedule:
+    """Transcribe the host driver's round schedule for a start radius.
+
+    This is ``_run_knn``'s loop control with the data-dependent early
+    exits removed: the device loop applies those itself (it stops growing
+    the moment the unresolved mask clears), so scheduling *more* rounds
+    than a batch ends up needing costs nothing at run time.  Grids come
+    from ``index._grid_for`` — same call order as the host driver, so the
+    lattice cache sees the identical build/hit sequence for the rounds
+    that execute.
+    """
+    radii, grids, hits = [], [], []
+    r = float(r0)
+    ridx = 0
+    force_brute_tail = False
+    clamp_r = 4.0 * index._extent
+    while ridx < index._max_rounds:
+        at_cap = False
+        if stop_radius is not None:
+            if cap_exact:
+                # hybrid cap: boundary round searches exactly the cap
+                # radius (jump straight there on the last budgeted round)
+                if r >= stop_radius or ridx == index._max_rounds - 1:
+                    r = float(stop_radius)
+                    at_cap = True
+            elif r > stop_radius:
+                break
+        grid, hit = index._grid_for(r)
+        radii.append(r)
+        grids.append(grid)
+        hits.append(hit)
+        ridx += 1
+        if at_cap:
+            break
+        # single-cell grid covering the cloud diagonal: the round was a
+        # brute-force pass; if queries still don't resolve, growing cannot
+        # help — the exact tail finishes them
+        if all(res == 1 for res in grid.res) and r * r >= index._sq_diag:
+            force_brute_tail = True
+            break
+        r *= index._growth
+        if r > clamp_r:
+            r = clamp_r
+    tail_mode = (
+        ("capped" if cap_exact else "plain")
+        if (force_brute_tail or stop_radius is None)
+        else "none"
+    )
+    return FusedSchedule(
+        radii=tuple(radii),
+        grids=tuple(grids),
+        cache_hits=tuple(hits),
+        tail_mode=tail_mode,
+        stop_radius=stop_radius,
+    )
+
+
+@lru_cache(maxsize=None)
+def _fused_fn(branch_tables: tuple, branch_of: tuple, has_tail: bool,
+              k: int, chunk: int, tail_chunk: int):
+    """The jitted multi-round driver for one schedule *shape*.
+
+    Static key: per-branch hash-table sizes, the round->branch map, the
+    tail form and the chunk geometry.  Everything else — the grids' bucket
+    arrays, the per-round squared radii, the query batch — is traced, so
+    warm batches whose schedules share a shape reuse the executable.
+    """
+    n_sched = len(branch_of)
+    branch_lookup = jnp.asarray(np.asarray(branch_of, np.int32))
+
+    def run(pts_padded, grids, q, qid, r2s):
+        n = pts_padded.shape[0] - 1
+        d = pts_padded.shape[1]
+        q_pad = q.shape[0]
+        offs = jnp.asarray(stencil_offsets(d))
+        qs = q.reshape(-1, chunk, d)
+        qids = qid.reshape(-1, chunk)
+
+        def make_branch(b):
+            buckets, point_cells, origin, inv_cell, res_arr = grids[b]
+            table_size = branch_tables[b]
+
+            def branch(carry):
+                best_d2, best_i, found, unres, res_round, tests_vec, t = carry
+                r2 = r2s[t]
+
+                def one_chunk(c, inp):
+                    qc, qidc, uc = inp
+                    top_d2, top_i, fnd, valid = _chunk_candidates(
+                        pts_padded, buckets, point_cells, origin, inv_cell,
+                        res_arr, offs, qc, qidc, r2,
+                        table_size=table_size, k=k,
+                    )
+                    # only still-unresolved rows are charged (resolved and
+                    # padding rows never reach the host driver's kernel)
+                    tests = jnp.sum(valid & uc[:, None], dtype=jnp.float32)
+                    return c, (top_d2, top_i, fnd, tests)
+
+                u_ch = unres.reshape(-1, chunk)
+                if qs.shape[0] == 1:
+                    # single-chunk batch: skip the scan machinery — its
+                    # per-iteration stacking is measurable per round on
+                    # the small-batch serving shape
+                    _, (td, ti, fc, tc) = one_chunk(
+                        None, (qs[0], qids[0], u_ch[0])
+                    )
+                else:
+                    _, (td, ti, fc, tc) = jax.lax.scan(
+                        one_chunk, None, (qs, qids, u_ch)
+                    )
+                td = td.reshape(q_pad, k)
+                ti = ti.reshape(q_pad, k)
+                fc = fc.reshape(q_pad)
+                # REPLACE (not merge) for unresolved rows: every round
+                # re-searches from scratch at the larger radius, exactly
+                # like the host driver's per-round overwrite
+                best_d2 = jnp.where(unres[:, None], td, best_d2)
+                best_i = jnp.where(unres[:, None], ti, best_i)
+                found = jnp.where(unres, fc, found)
+                res_now = unres & (fc >= k)
+                res_round = jnp.where(res_now, t, res_round)
+                tests_vec = tests_vec.at[t].set(jnp.sum(tc))
+                return (best_d2, best_i, found, unres & ~res_now,
+                        res_round, tests_vec, t + jnp.int32(1))
+
+            return branch
+
+        branches = [make_branch(b) for b in range(len(branch_tables))]
+
+        def cond(carry):
+            return (carry[6] < n_sched) & jnp.any(carry[3])
+
+        def body(carry):
+            return jax.lax.switch(branch_lookup[carry[6]], branches, carry)
+
+        init = (
+            jnp.full((q_pad, k), jnp.inf, jnp.float32),
+            jnp.full((q_pad, k), n, jnp.int32),
+            jnp.zeros((q_pad,), jnp.int32),
+            jnp.isfinite(q[:, 0]),  # padding rows start resolved
+            jnp.full((q_pad,), -1, jnp.int32),
+            jnp.zeros((n_sched,), jnp.float32),
+            jnp.int32(0),
+        )
+        best_d2, best_i, found, unres, res_round, tests_vec, t = (
+            jax.lax.while_loop(cond, body, init)
+        )
+        best_d = jnp.sqrt(best_d2)
+        if has_tail:
+            # exact oracle for whatever the loop left unresolved, inlined
+            # into the same program (jit-of-jit): identical ops to the
+            # host driver's brute_knn_engine tail.  Rows are replaced
+            # wholesale, as the host does; the hybrid re-cut and the
+            # found recount are host-side post-filters in both drivers.
+            def with_tail(args):
+                bd_, bi_ = args
+                d2t, it = _brute_impl(
+                    pts_padded[:n], q, qid, k=k, chunk=tail_chunk,
+                    exclude_self=True, metric="l2",
+                )
+                dt = jnp.sqrt(d2t)
+                bd_ = jnp.where(unres[:, None], dt, bd_)
+                bi_ = jnp.where(unres[:, None], it, bi_)
+                return bd_, bi_
+
+            best_d, best_i = jax.lax.cond(
+                jnp.any(unres), with_tail, lambda a: a, (best_d, best_i)
+            )
+        return best_d, best_i, found, unres, res_round, tests_vec, t
+
+    return jax.jit(run)
+
+
+def fused_search(points, schedule: FusedSchedule, queries, query_ids,
+                 k: int, *, chunk: int = 2048) -> FusedResult:
+    """Run one whole multi-round search as a single jitted dispatch.
+
+    ``points`` is the resident cloud (host or device array), ``queries``
+    (Q, d) with ``query_ids`` (Q,) int32 (the dataset id for self-queries,
+    N otherwise).  The batch is padded once to a power of two; the only
+    host sync is the final result fetch.
+    """
+    q = jnp.asarray(queries, jnp.float32)
+    qid = jnp.asarray(query_ids, jnp.int32)
+    q_total = q.shape[0]
+    q_pad = _next_pow2(max(q_total, 1))
+    chunk = _floor_pow2(min(int(chunk), q_pad))
+    if q_pad > q_total:
+        q = jnp.concatenate(
+            [q, jnp.full((q_pad - q_total, q.shape[1]), jnp.inf, q.dtype)]
+        )
+        qid = jnp.concatenate(
+            [qid, jnp.full((q_pad - q_total,), schedule.grids[0].n_points,
+                           qid.dtype)]
+        )
+    pts = _pad_points(jnp.asarray(points, jnp.float32))
+
+    # dedupe repeated grids (post-lattice-cap rounds share the single-cell
+    # grid) into switch branches; the round->branch map is static
+    seen: dict = {}
+    branch_of = []
+    branch_grids = []
+    for g in schedule.grids:
+        b = seen.get(id(g))
+        if b is None:
+            b = len(branch_grids)
+            seen[id(g)] = b
+            branch_grids.append(g)
+        branch_of.append(b)
+    grid_args = tuple(
+        (g.buckets, g.point_cells, g.origin, g.inv_cell, g.res_arr)
+        for g in branch_grids
+    )
+    # host numpy f32 square == device f32 square (same IEEE multiply)
+    r2s = jnp.asarray(np.asarray(schedule.radii, np.float32) ** 2)
+
+    fn = _fused_fn(
+        tuple(g.table_size for g in branch_grids),
+        tuple(branch_of),
+        schedule.tail_mode != "none",
+        int(k),
+        chunk,
+        min(512, q_pad),
+    )
+    bd, bi, found, unres, res_round, tests, t = fn(pts, grid_args, q, qid, r2s)
+    return FusedResult(
+        dists=np.array(bd[:q_total]),
+        idxs=np.array(bi[:q_total]),
+        found=np.array(found[:q_total]),
+        unresolved=np.array(unres[:q_total]),
+        resolved_round=np.array(res_round[:q_total]),
+        tests=np.asarray(tests, np.float64),
+        n_executed=int(t),
+        q_pad=q_pad,
+    )

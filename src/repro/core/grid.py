@@ -140,12 +140,21 @@ def build_grid(
     force_table_size: int = 0,
     force_cap: int = 0,
     n_valid: int = 0,
+    probe_cache: dict = None,
 ) -> Grid:
     """Build a hash grid whose effective cell size is >= ``radius`` per axis.
 
     Host-orchestrated (table size / capacity become concrete) — the analogue
     of the paper's host-side BVH refit between rounds.  ``n_valid``: rows
     beyond it are padding (sharded stacking), excluded from the index.
+
+    ``probe_cache``: optional per-point-cloud memo of the table-sizing probe
+    below.  The probe is deterministic in (points[:n_valid], initial res),
+    and the initial res is itself a pure function of the radius — so a
+    caller holding one dict per resident cloud (TrueKNN's lattice rebuilds
+    the same snapped radii batch after batch) skips the O(N) host probe on
+    repeats.  Ignored under ``force_table_size``/``force_cap`` (the caller
+    already owns the shape).  ``"_hits"``/``"_misses"`` count lookups.
     """
     pts_all = np.asarray(points, dtype=np.float32)
     n, d = pts_all.shape
@@ -160,30 +169,48 @@ def build_grid(
         np.floor(extent / radius).astype(np.int64), 1, _MAX_RES_PER_AXIS
     )
 
-    while True:
+    use_cache = (
+        probe_cache is not None and not force_table_size and not force_cap
+    )
+    probe_key = (n_valid, tuple(int(x) for x in res)) if use_cache else None
+    cached = probe_cache.get(probe_key) if use_cache else None
+    if cached is not None:
+        probe_cache["_hits"] = probe_cache.get("_hits", 0) + 1
+        table_size, cap, res_t = cached
+        res = np.asarray(res_t, np.int64)
         cell = (extent / res).astype(np.float32)
-        coords = np.clip(np.floor((pts - lo) / cell).astype(np.int64), 0, res - 1)
-        # pack to a unique id per occupied cell (host side, exact)
-        packed = coords[:, 0]
-        for a in range(1, d):
-            packed = packed * res[a] + coords[:, a]
-        n_occ = len(np.unique(packed))
-        table_size = force_table_size or _next_pow2(
-            max(int(n_occ / load_factor), 16)
-        )
-        h = hash_coords(coords.astype(np.int64), table_size)
-        occ = np.bincount(h, minlength=table_size)
-        needed_cap = _next_pow2(max(int(occ.max()), 1))
-        if force_cap:
-            # caller pre-computed a shared shape (sharded-grid stacking);
-            # it must be adequate — exactness over silent truncation.
-            assert needed_cap <= force_cap, (needed_cap, force_cap)
-            cap = force_cap
-            break
-        cap = needed_cap
-        if table_size * cap <= max_bucket_elems or int(res.max()) == 1:
-            break
-        res = np.maximum(res // 2, 1)  # coarsen (cells grow — always safe)
+    else:
+        while True:
+            cell = (extent / res).astype(np.float32)
+            coords = np.clip(
+                np.floor((pts - lo) / cell).astype(np.int64), 0, res - 1
+            )
+            # pack to a unique id per occupied cell (host side, exact)
+            packed = coords[:, 0]
+            for a in range(1, d):
+                packed = packed * res[a] + coords[:, a]
+            n_occ = len(np.unique(packed))
+            table_size = force_table_size or _next_pow2(
+                max(int(n_occ / load_factor), 16)
+            )
+            h = hash_coords(coords.astype(np.int64), table_size)
+            occ = np.bincount(h, minlength=table_size)
+            needed_cap = _next_pow2(max(int(occ.max()), 1))
+            if force_cap:
+                # caller pre-computed a shared shape (sharded-grid stacking);
+                # it must be adequate — exactness over silent truncation.
+                assert needed_cap <= force_cap, (needed_cap, force_cap)
+                cap = force_cap
+                break
+            cap = needed_cap
+            if table_size * cap <= max_bucket_elems or int(res.max()) == 1:
+                break
+            res = np.maximum(res // 2, 1)  # coarsen (cells grow — always safe)
+        if use_cache:
+            probe_cache["_misses"] = probe_cache.get("_misses", 0) + 1
+            probe_cache[probe_key] = (
+                table_size, cap, tuple(int(r) for r in res)
+            )
 
     res_t = tuple(int(r) for r in res)
     origin = jnp.asarray(lo)

@@ -120,9 +120,10 @@ class KNNResult:
 
     @property
     def total_seconds(self) -> float:
-        if self.rounds:
-            return sum(r.seconds for r in self.rounds)
-        return float(self.timings.get("query_seconds", 0.0))
+        # fused multi-round searches run as ONE dispatch: their rounds carry
+        # seconds=0.0, and the wall time lives in timings["query_seconds"]
+        t = sum(r.seconds for r in self.rounds) if self.rounds else 0.0
+        return t or float(self.timings.get("query_seconds", 0.0))
 
 
 @dataclasses.dataclass

@@ -201,7 +201,12 @@ def test_brute_equivalent_round_falls_through_to_brute(monkeypatch):
 
     monkeypatch.setattr(tk, "fixed_radius_round", never_resolves)
     pts = make_dataset("uniform", 300, seed=5)
-    res = build_index(pts, backend="trueknn", max_rounds=64).query(None, 3)
+    # fused=False: the patched per-round engine is the host loop's — the
+    # fused driver never calls it (its clamp guard is covered by the
+    # fused-vs-host identity matrix in test_fused_loop.py)
+    res = build_index(
+        pts, backend="trueknn", max_rounds=64, fused=False
+    ).query(None, 3)
     # grid rounds stopped at the brute-equivalent radius, far below budget
     grid_rounds = [r for r in res.rounds if np.isfinite(r.radius)]
     assert calls["n"] == len(grid_rounds) < 30
