@@ -21,6 +21,7 @@ def main() -> None:
         bench_brute,
         bench_dataset_size,
         bench_fused_loop,
+        bench_graph,
         bench_index_reuse,
         bench_k,
         bench_kernel,
@@ -86,6 +87,11 @@ def main() -> None:
     with open("BENCH_fused.json", "w") as f:
         json.dump(fused_summary, f, indent=2, default=str)
     print("# wrote BENCH_fused.json", flush=True)
+    _section("graph workloads (kNN graph / DBSCAN identity, self-batch locality)")
+    graph_summary = bench_graph.main()
+    with open("BENCH_graph.json", "w") as f:
+        json.dump(graph_summary, f, indent=2, default=str)
+    print("# wrote BENCH_graph.json", flush=True)
     _section("mutation (LSM composite: storm identity, sustained, delta tax)")
     mutation_summary = bench_mutation.main()
     with open("BENCH_mutation.json", "w") as f:

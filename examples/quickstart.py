@@ -30,6 +30,7 @@ import numpy as np
 from repro.api import (
     HybridSpec,
     KnnSpec,
+    NeighborServer,
     RangeSpec,
     available_backends,
     available_metrics,
@@ -155,6 +156,43 @@ print(
 )
 print(f"placed == monolith: "
       f"{bool(np.array_equal(pres.dists, index.query(qs, KnnSpec(k=5)).dists))}")
+
+# -- graph workloads: kNN graph + DBSCAN on the fabric -----------------------
+# AllPairsSpec is "the dataset queries itself" as a first-class spec; the
+# workloads package turns it into artifacts.  Answers are deterministic:
+# the same CSR arrays and the same labels from every backend — shown here
+# on a 4k slice, comparing the brute reference against the device-placed
+# fabric (quickstart sizing: see benchmarks/bench_graph.py for bench scale).
+from repro.workloads import build_knn_graph, dbscan  # noqa: E402
+
+wpts = pts[:4_000]
+ref_idx = build_index(wpts, backend="brute")
+g = build_knn_graph(ref_idx, k=5, symmetrize="union")
+deg = g.counts
+print(
+    f"kNN graph: {g.n} nodes, {g.n_edges} undirected edges "
+    f"(degree min {int(deg.min())} / max {int(deg.max())}), "
+    f"backend={g.backend}"
+)
+wplaced = build_index(wpts, backend="sharded", n_shards="auto",
+                      placement="devices")
+g2 = build_knn_graph(wplaced, k=5, symmetrize="union")
+print(f"graph identical from placed fabric: "
+      f"{bool(np.array_equal(g.indices, g2.indices))}")
+
+eps = float(np.median(g.dists)) * 1.5
+clus = dbscan(wplaced, eps, min_pts=6)
+print(
+    f"DBSCAN(eps={eps:.4f}, min_pts=6): {clus.n_clusters} clusters, "
+    f"{int(clus.core.sum())} core points, {clus.n_noise} noise"
+)
+
+# the same workloads as server tickets (ordered against tenant writes)
+wserver = NeighborServer(wplaced)
+wt = wserver.submit_cluster(eps, 6)
+print(f"served cluster ticket == direct: "
+      f"{bool(np.array_equal(wt.result().labels, clus.labels))}; "
+      f"meter {wserver.stats()['workloads']['default']}")
 
 print(f"registered backends: {available_backends()}")
 print(f"registered metrics:  {available_metrics()}")

@@ -78,7 +78,7 @@ from .metrics import (
     normalize_rows,
     register_metric,
 )
-from .query import HybridSpec, KnnSpec, QuerySpec, RangeSpec
+from .query import AllPairsSpec, HybridSpec, KnnSpec, QuerySpec, RangeSpec
 
 from . import backends  # registers the built-in backends  # noqa: E402
 from .index import NeighborIndex, build_index
@@ -101,6 +101,7 @@ __all__ = [
     "KnnSpec",
     "RangeSpec",
     "HybridSpec",
+    "AllPairsSpec",
     "Metric",
     "register_metric",
     "get_metric",

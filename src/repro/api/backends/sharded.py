@@ -219,6 +219,10 @@ class ShardedIndex(NeighborIndex):
             "child_dispatches": 0,
             "fused_dispatches": 0,
             "rebalances": 0,
+            # self-batch locality split: rows resolved entirely by their
+            # own shard's local pass vs rows that needed shared-cut rounds
+            "self_local_rows": 0,
+            "self_boundary_rows": 0,
         }
 
     # -- geometry ----------------------------------------------------------
@@ -556,6 +560,34 @@ class ShardedIndex(NeighborIndex):
             return spec
         return HybridSpec(k_child, r)
 
+    def _self_local_pass(self, k: int, k_eff: int, metric: Metric, ctx=None):
+        """Shard-local leg of a self-batch: every shard answers its OWN
+        rows with its native self-query path (``queries=None`` — exact
+        self-excluded top-k, one dispatch per shard, device buffer reuse
+        and all), scattered into a global (N, k_eff) seed pool.  Returns
+        ``(local_d, local_i, n_tests)``; rows in shards too small to hold
+        k neighbors keep inf/sentinel tails and resolve through the
+        shared-cut rounds."""
+        from ..planner import execute
+
+        n = self.n_points
+        local_d = np.full((n, k_eff), np.inf, np.float32)
+        local_i = np.full((n, k_eff), n, np.int32)
+        tests = 0
+        for s, idx in enumerate(self._part.shards):
+            nc = len(idx)
+            k_loc = min(k, nc - 1)
+            if k_loc < 1:
+                continue  # empty or single-point shard: only itself inside
+            self._c["child_dispatches"] += 1
+            res = execute(
+                self._children[s], None, KnnSpec(k_loc), metric.name, ctx
+            )
+            tests += int(res.n_tests)
+            local_d[idx, :k_loc] = np.asarray(res.dists)
+            local_i[idx, :k_loc] = self._gmaps[s][np.asarray(res.idxs)]
+        return local_d, local_i, tests
+
     def _scatter_knn(self, res, sel, q_total: int, width: int, s: int):
         """Lift a child's subset answer to a full-Q, global-index part."""
         d = np.full((q_total, width), np.inf, np.float32)
@@ -719,6 +751,37 @@ class ShardedIndex(NeighborIndex):
         total_tests = 0
         searches = 0
         r = 0.0
+        # self-batch locality pre-pass: each shard's rows query their OWN
+        # block first (the child's exact self-excluded top-k, one self
+        # dispatch per shard).  Rows whose k-th local candidate is provably
+        # closer than anything any other shard can hold resolve right here;
+        # only boundary rows enter the shared-cut rounds — and never
+        # re-visit their own shard (the local unbounded top-k dominates any
+        # radius-capped re-search of the same block).
+        assign = self._part.assign
+        local_d = local_i = None
+        n_local = 0
+        if self_ids is not None and q_total == n:
+            local_d, local_i, local_tests = self._self_local_pass(
+                k, k_eff, metric, ctx
+            )
+            total_tests += local_tests
+            searches += q_total
+            ever[np.arange(q_total), assign] = True
+            pool_d[:] = local_d
+            pool_i[:] = local_i
+            # strictly-< against the deflated lower bounds: any foreign
+            # point sits at >= its shard's bound, so kth strictly below
+            # every other shard's bound can never be displaced (nor tied)
+            kth_seed = local_d[:, k - 1].astype(np.float64)
+            other = bounds.copy()
+            other[np.arange(q_total), assign] = np.inf
+            interior = kth_seed < other.min(axis=1)
+            resolved_at[interior] = kth_seed[interior]
+            unresolved &= ~interior
+            n_local = int(interior.sum())
+            self._c["self_local_rows"] += n_local
+            self._c["self_boundary_rows"] += q_total - n_local
         while unresolved.any():
             tr = time.perf_counter()
             pend = floor[unresolved]
@@ -734,8 +797,15 @@ class ShardedIndex(NeighborIndex):
             # fresh pool rows for this round's searchers: the round's parts
             # are complete within r, and re-searched shards would otherwise
             # duplicate candidates already pooled at a smaller cut
-            pool_d[unresolved] = np.inf
-            pool_i[unresolved] = n
+            if local_d is not None:
+                # re-seed from the local pass (the own-shard part of every
+                # round's pool) — own shards are masked out of the visits
+                visit_now[np.arange(q_total), assign] = False
+                pool_d[unresolved] = local_d[unresolved]
+                pool_i[unresolved] = local_i[unresolved]
+            else:
+                pool_d[unresolved] = np.inf
+                pool_i[unresolved] = n
             round_tests = 0
             for s in range(s_total):
                 sel = np.flatnonzero(visit_now[:, s])
@@ -797,6 +867,9 @@ class ShardedIndex(NeighborIndex):
             final_radius=rounds[-1].radius if rounds else None,
         )
         out.timings["shard_searches"] = searches
+        if local_d is not None:
+            out.timings["self_local_rows"] = n_local
+            out.timings["self_boundary_rows"] = q_total - n_local
         return self._account(q_total, int(ever.sum()), t0, out)
 
     def _execute_knn_placed(self, queries, spec: KnnSpec, metric: Metric,

@@ -49,7 +49,7 @@ from repro.core.grid import _next_pow2
 from repro.core.result import slice_rows
 
 from .metrics import get_metric
-from .planner import build_plan, empty_result, run_plan
+from .planner import build_plan, empty_result, resolve_self_queries, run_plan
 from .query import QuerySpec
 
 __all__ = ["QueryPlan", "PlanContext", "canonical_rows"]
@@ -150,6 +150,11 @@ class QueryPlan:
         """Execute the prepared plan; returns KNNResult or RangeResult."""
         self._check_generation()
         self.executions += 1
+        # centralized self-query detection: a caller handing back the
+        # resident point array means "the dataset queries itself" — every
+        # backend sees the canonical queries=None self path (identical
+        # self-exclusion semantics, no per-backend re-detection)
+        queries = resolve_self_queries(self.index, queries)
         if self.index.n_points == 0:
             # empty resident cloud (a mutable index before its first
             # insert, or drained by deletes): every engine assumes at

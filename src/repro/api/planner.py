@@ -61,10 +61,16 @@ from typing import Callable, Optional
 import numpy as np
 
 from repro.core.grid import _next_pow2
-from repro.core.result import KNNResult, RangeResult
+from repro.core.result import (
+    KNNResult,
+    RangeResult,
+    slice_rows,
+    strip_self_csr,
+    strip_self_knn,
+)
 
 from .metrics import Metric, get_metric
-from .query import HybridSpec, KnnSpec, QuerySpec, RangeSpec
+from .query import AllPairsSpec, HybridSpec, KnnSpec, QuerySpec, RangeSpec
 
 __all__ = [
     "PlanNode",
@@ -75,6 +81,7 @@ __all__ = [
     "apply_radius_cut",
     "range_from_counted_round",
     "range_via_counted_topk",
+    "resolve_self_queries",
     "shard_visit_mask",
     "shard_plan_tag",
     "placed_plan_tag",
@@ -115,6 +122,25 @@ def placed_plan_tag(visited: int, potential: int, dispatches: int) -> str:
     ``sharded/pruned=`` prefix so every existing tag consumer still
     parses it."""
     return shard_plan_tag(visited, potential) + f"/placed={int(dispatches)}"
+
+
+def resolve_self_queries(index, queries):
+    """THE "queries is the index's own cloud" detection, centralized.
+
+    Every backend spells self-queries as ``queries=None`` (qid-based
+    self-exclusion in the engines, ``strip_self_*`` in the composites).
+    Callers that pass the resident point array *itself* mean the same
+    search; canonicalizing here — by object identity, never by value
+    (an equal copy is a foreign batch whose rows may legitimately match
+    themselves) — guarantees every backend applies identical
+    self-exclusion semantics instead of each call site re-deciding.
+    """
+    if queries is None:
+        return None
+    pts = getattr(index, "points", None)
+    if pts is not None and queries is pts:
+        return None
+    return queries
 
 
 def apply_radius_cut(dists, idxs, cut: float, sentinel: int):
@@ -272,6 +298,8 @@ def build_plan(index, spec: QuerySpec, metric_name: str) -> PlanNode:
     """
     metric = get_metric(metric_name)
     spec.validate()
+    if isinstance(spec, AllPairsSpec):
+        return _build_all_pairs(index, spec, metric)
     if metric.name in index.native_metrics:
         return _build_dispatch(index, spec, metric)
     if metric.has_l2_view and _L2 in index.native_metrics:
@@ -297,6 +325,46 @@ def build_plan(index, spec: QuerySpec, metric_name: str) -> PlanNode:
     return PlanNode(
         "brute_metric", index.backend_name, spec, metric.name, "brute_metric",
         props={"engine": "exact metric-aware dense"},
+    )
+
+
+def _build_all_pairs(index, spec: AllPairsSpec, metric: Metric) -> PlanNode:
+    """Route the self-query workload spec.  Metric dispatch happens in the
+    *children* (the lowered ordinary specs), so cosine all-pairs rides the
+    l2_view companion exactly like a cosine KnnSpec would.
+
+    Two children: the whole-batch plan (``queries=None`` — the backend's
+    own self path, shard-local locality and all) and the chunk plan
+    (explicit row blocks over-fetched by the self slot, stripped with
+    ``strip_self_knn``/``strip_self_csr`` after each block).
+    """
+    n = index.n_points
+    if spec.mode == "knn" and n > 0 and spec.k > n - 1:
+        raise ValueError(
+            f"AllPairsSpec(k={spec.k}) asks for k self-excluded neighbors "
+            f"but the index holds only {n} points (k must be <= n-1)"
+        )
+    chunk_spec = (
+        KnnSpec(spec.k + 1)
+        if spec.mode == "knn"
+        else RangeSpec(spec.radius)
+    )
+    tag = (
+        "all_pairs"
+        if spec.chunk_rows is None
+        else f"all_pairs/chunked={spec.chunk_rows}"
+    )
+    return PlanNode(
+        "all_pairs", index.backend_name, spec, metric.name, tag,
+        props={
+            "mode": spec.mode,
+            "self_excluded": True,
+            "chunk_rows": spec.chunk_rows,
+        },
+        children=[
+            build_plan(index, spec.lowered(), metric.name),
+            build_plan(index, chunk_spec, metric.name),
+        ],
     )
 
 
@@ -336,6 +404,8 @@ def run_plan(node: PlanNode, index, queries, ctx=None):
         return _via_l2_view(index, queries, spec, metric, ctx)
     if node.route == "brute_metric":
         return _brute_plan(index, queries, spec, metric, ctx)
+    if node.route == "all_pairs":
+        return _run_all_pairs(index, queries, spec, node, metric, ctx)
     raise ValueError(f"unknown plan route {node.route!r}")
 
 
@@ -346,6 +416,7 @@ def execute(index, queries, spec: QuerySpec, metric_name: str, ctx=None):
     through a throwaway ``QueryPlan`` that lands here; prepared plans call
     :func:`run_plan` on their cached tree instead.
     """
+    queries = resolve_self_queries(index, queries)
     return run_plan(build_plan(index, spec, metric_name), index, queries, ctx)
 
 
@@ -369,6 +440,8 @@ def empty_result(index, spec: QuerySpec, metric_name: str, *,
     metric = get_metric(metric_name)
     q_total = int(q_total)
     timings = {"plan": "empty", "query_seconds": 0.0}
+    if isinstance(spec, AllPairsSpec):
+        spec = spec.lowered()
     if isinstance(spec, RangeSpec):
         return _empty_range(q_total, spec, index.backend_name, metric.name,
                             timings)
@@ -389,6 +462,97 @@ def _dispatch(index, queries, spec, metric: Metric, ctx=None):
     dispatch used by generic plans whose sub-spec is shaped at run time —
     the sweep's growing k, the view's transformed spec)."""
     return run_plan(_build_dispatch(index, spec, metric), index, queries, ctx)
+
+
+# -- the all-pairs (self-query workload) route ------------------------------
+
+
+def _run_all_pairs(index, queries, spec: AllPairsSpec, node: PlanNode,
+                   metric: Metric, ctx=None):
+    """Execute the self-query workload: the dataset against itself.
+
+    Unchunked, this is the backend's own ``queries=None`` self path (the
+    exact self-excluded answer, shard-local locality on the fabric).
+    With ``chunk_rows`` set, row blocks stream through the chunk child —
+    over-fetched by one slot for the self entry, stripped per block — so
+    million-row clouds reuse ONE compiled shape through the prepared-plan
+    executable cache.  Both paths produce the identical answer: every
+    backend is exact with the (dist, id) lexicographic tie-break, so the
+    final rows are the unique answer whatever the internal batching.
+    """
+    if queries is not None:
+        raise ValueError(
+            "AllPairsSpec queries the index's own points: pass queries=None "
+            "(or the resident index.points array itself)"
+        )
+    t0 = time.perf_counter()
+    whole_node, chunk_node = node.resolved_children()
+    n = index.n_points
+    c = spec.chunk_rows
+    if c is None or c >= n:
+        res = run_plan(whole_node, index, None, ctx)
+        inner = res.timings.get("plan")
+        if inner and inner != "native":
+            res.timings["plan_inner"] = inner
+        res.timings["plan"] = "all_pairs"
+        res.timings["query_seconds"] = time.perf_counter() - t0
+        return res
+
+    pts = np.asarray(index.points)
+    sentinel = int(getattr(index, "sentinel", n))
+    knn_d, knn_i, csr_parts = [], [], []
+    total_tests = 0
+    n_chunks = 0
+    for i0 in range(0, n, c):
+        i1 = min(i0 + c, n)
+        m = i1 - i0
+        q = pts[i0:i1]
+        if m < c:
+            # pad the tail block by repeating row 0: every block runs at
+            # ONE canonical shape (one compiled executable), pad rows are
+            # sliced away before stripping
+            q = np.concatenate([q, np.repeat(pts[:1], c - m, axis=0)])
+        part = run_plan(chunk_node, index, q, ctx)
+        total_tests += int(part.n_tests)
+        n_chunks += 1
+        part = slice_rows(part, m)
+        ids = np.arange(i0, i1)
+        if spec.mode == "knn":
+            d, ix = strip_self_knn(
+                np.asarray(part.dists), np.asarray(part.idxs), ids,
+                spec.k, sentinel,
+            )
+            knn_d.append(d)
+            knn_i.append(ix)
+        else:
+            csr_parts.append(strip_self_csr(part, ids))
+    timings = {
+        "plan": f"all_pairs/chunked={c}",
+        "chunks": n_chunks,
+        "query_seconds": time.perf_counter() - t0,
+    }
+    if spec.mode == "knn":
+        return KNNResult(
+            dists=np.concatenate(knn_d).astype(np.float32),
+            idxs=np.concatenate(knn_i).astype(np.int32),
+            n_tests=total_tests,
+            backend=index.backend_name,
+            metric=metric.name,
+            timings=timings,
+        )
+    counts = np.concatenate([p.counts for p in csr_parts])
+    offsets = np.zeros((n + 1,), np.int64)
+    np.cumsum(counts, out=offsets[1:])
+    return RangeResult(
+        offsets=offsets,
+        idxs=np.concatenate([p.idxs for p in csr_parts]).astype(np.int32),
+        dists=np.concatenate([p.dists for p in csr_parts]).astype(np.float32),
+        radius=spec.radius,
+        n_tests=total_tests,
+        backend=index.backend_name,
+        metric=metric.name,
+        timings=timings,
+    )
 
 
 # -- generic plan: knn via a companion engine -------------------------------

@@ -40,6 +40,7 @@ __all__ = [
     "KnnSpec",
     "RangeSpec",
     "HybridSpec",
+    "AllPairsSpec",
     "warn_deprecated_once",
 ]
 
@@ -168,6 +169,67 @@ class HybridSpec(QuerySpec):
         object.__setattr__(
             self, "radius", _check_pos_float("radius", self.radius)
         )
+
+    def validate(self) -> None:
+        pass
+
+
+@dataclasses.dataclass(frozen=True)
+class AllPairsSpec(QuerySpec):
+    """The dataset queries itself — the kNN-graph / clustering workload.
+
+    Queries are the index's own resident points, so the planner routes
+    this through the self-query path every backend already has (qid-based
+    self-exclusion, ``strip_self_knn``/``strip_self_csr``) instead of
+    treating the cloud as a foreign batch.  Two modes:
+
+    * ``mode="knn"`` — each point's k nearest *other* points (the kNN-graph
+      edge set).  Dense ``(N, k)`` KNNResult.
+    * ``mode="range"`` — each point's neighbors within ``radius``,
+      excluding itself (the DBSCAN eps-neighborhood).  Ragged CSR
+      ``RangeResult``; the ``d == radius`` boundary is inclusive, the same
+      ``<=`` form as ``RangeSpec``.
+
+    ``chunk_rows`` bounds how many self-rows run per dispatch: million-row
+    clouds stream through the prepared-plan executable cache in equal
+    fixed-shape blocks rather than one monolithic batch.  Chunked and
+    unchunked execution return bit-identical answers (every backend is
+    exact with the (dist, id) lexicographic tie-break, so the final rows
+    are the unique answer regardless of internal batching).
+    """
+
+    k: Optional[int] = None
+    mode: str = "knn"
+    radius: Optional[float] = None
+    chunk_rows: Optional[int] = None
+    kind: ClassVar[str] = "all_pairs"
+
+    def __post_init__(self):
+        if self.mode not in ("knn", "range"):
+            raise ValueError(
+                f"mode must be 'knn' or 'range', got {self.mode!r}"
+            )
+        if self.mode == "knn":
+            if self.radius is not None:
+                raise ValueError("mode='knn' takes k, not radius")
+            object.__setattr__(self, "k", _check_pos_int("k", self.k))
+        else:
+            if self.k is not None:
+                raise ValueError("mode='range' takes radius, not k")
+            object.__setattr__(
+                self, "radius", _check_pos_float("radius", self.radius)
+            )
+        if self.chunk_rows is not None:
+            object.__setattr__(
+                self, "chunk_rows",
+                _check_pos_int("chunk_rows", self.chunk_rows),
+            )
+
+    def lowered(self) -> QuerySpec:
+        """The ordinary spec a self-batch of this spec answers with."""
+        if self.mode == "knn":
+            return KnnSpec(self.k)
+        return RangeSpec(self.radius)
 
     def validate(self) -> None:
         pass

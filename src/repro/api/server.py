@@ -50,6 +50,11 @@ and request it provides:
 * **Metering.**  Per (index, spec-kind, k, metric) bucket: request latency
   p50/p99, throughput, batch-size histogram, cache hit rate, plan-cache
   hit/miss, queue depth — all through ``server.stats()``.
+* **Workloads.**  ``submit_graph(k)`` / ``submit_cluster(eps, min_pts)``
+  enqueue whole-cloud batch analytics (kNN-graph construction, DBSCAN —
+  see ``repro.workloads``) as tickets on the same queue fabric: they
+  order against the tenant's writes like reads do, run under the serve
+  lock, and are metered per tenant under ``stats()["workloads"]``.
 
 Synchronous use (tests, notebooks)::
 
@@ -118,6 +123,31 @@ class _WriteSpec:
 
 
 _WRITE = _WriteSpec()
+
+
+class _WorkloadSpec:
+    """Queue-key marker for graph-workload tickets (kNN-graph builds,
+    DBSCAN runs).  One instance per submitted workload — each is its own
+    queue bucket, workloads never coalesce — but, not being a
+    ``_WriteSpec``, they sit on the *read* side of ``step()``'s
+    write/read barrier: a workload snapshots the tenant strictly between
+    the writes submitted before and after it.  Duck-types the spec
+    attributes the meters read (``kind``, ``k``)."""
+
+    __slots__ = ("kind", "k", "eps", "min_pts", "symmetrize")
+
+    def __init__(self, kind, *, k=None, eps=None, min_pts=None,
+                 symmetrize=None):
+        self.kind = kind
+        self.k = k
+        self.eps = eps
+        self.min_pts = min_pts
+        self.symmetrize = symmetrize
+
+    def __repr__(self):
+        if self.kind == "graph":
+            return f"<graph k={self.k} symmetrize={self.symmetrize}>"
+        return f"<cluster eps={self.eps} min_pts={self.min_pts}>"
 
 
 class AdmissionError(RuntimeError):
@@ -459,6 +489,8 @@ class NeighborServer:
         self._inflight: dict = {}  # index_name -> rows popped, not yet served
         # index_name -> {"inserts": rows, "deletes": rows, "write_ops": n}
         self._tenant_writes: dict = {}
+        # index_name -> {"graphs": n, "clusters": n, "workload_rows": rows}
+        self._tenant_workloads: dict = {}
 
     # -- tenant registry ---------------------------------------------------
 
@@ -662,6 +694,67 @@ class NeighborServer:
             self._arrived.notify_all()
         return ticket
 
+    def submit_graph(self, k, *, symmetrize: str = "union",
+                     metric: str = "l2", chunk_rows=None,
+                     index: Optional[str] = None) -> Ticket:
+        """Enqueue a kNN-graph build over the named tenant's resident
+        cloud; ``result()`` is a ``repro.workloads.KnnGraph``.  Workloads
+        ride the tenant's queue fabric on the read side of the write
+        barrier, so the graph snapshots the cloud exactly between the
+        writes submitted before and after it.  Exempt from ``max_queue``
+        shedding (one queued workload is one pending row, and dropping a
+        batch analytic a client will simply resubmit saves nothing)."""
+        from repro.workloads.graph import _SYMMETRIZE_MODES
+
+        name = self._resolve_index(index)
+        k = int(k)
+        if k < 1:
+            raise ValueError(f"k must be >= 1, got {k}")
+        if symmetrize not in _SYMMETRIZE_MODES:
+            raise ValueError(
+                f"symmetrize must be one of {_SYMMETRIZE_MODES}, "
+                f"got {symmetrize!r}"
+            )
+        spec = _WorkloadSpec("graph", k=k, symmetrize=str(symmetrize))
+        op = ("graph", {"k": k, "symmetrize": str(symmetrize),
+                        "metric": metric, "chunk_rows": chunk_rows})
+        return self._submit_workload(name, spec, metric, op)
+
+    def submit_cluster(self, eps, min_pts, *, metric: str = "l2",
+                       chunk_rows=None,
+                       index: Optional[str] = None) -> Ticket:
+        """Enqueue a DBSCAN(eps, min_pts) run over the named tenant's
+        resident cloud; ``result()`` is a ``repro.workloads.DbscanResult``.
+        Same ordering/admission semantics as :meth:`submit_graph`."""
+        name = self._resolve_index(index)
+        eps = float(eps)
+        min_pts = int(min_pts)
+        if not (eps > 0.0):
+            raise ValueError(f"eps must be > 0, got {eps}")
+        if min_pts < 1:
+            raise ValueError(f"min_pts must be >= 1, got {min_pts}")
+        spec = _WorkloadSpec("cluster", eps=eps, min_pts=min_pts)
+        op = ("cluster", {"eps": eps, "min_pts": min_pts,
+                          "metric": metric, "chunk_rows": chunk_rows})
+        return self._submit_workload(name, spec, metric, op)
+
+    def _submit_workload(self, name, spec, metric, op) -> Ticket:
+        ticket = Ticket(self, spec, metric, 1, index_name=name)
+        with self._lock:
+            if name not in self._indexes:
+                raise KeyError(
+                    f"unknown index {name!r}; registered: "
+                    f"{sorted(self._indexes)}"
+                )
+            meter = self._meter(name, spec, metric)
+            meter.requests += 1
+            meter.rows += 1
+            self._submitted += 1
+            queue = self._queues.setdefault((name, spec, metric), deque())
+            queue.append((ticket, op, None))
+            self._arrived.notify_all()
+        return ticket
+
     def step(self) -> int:
         """Serve one microbatch from the (index, spec, metric) queue whose
         head request has waited longest (FIFO across buckets — no
@@ -698,6 +791,8 @@ class NeighborServer:
         try:
             if isinstance(spec, _WriteSpec):
                 return self._run_writes(name, batch)
+            if isinstance(spec, _WorkloadSpec):
+                return self._run_workloads(name, batch)
             return self._run_batch(name, spec, metric, batch)
         finally:
             with self._lock:
@@ -820,6 +915,10 @@ class NeighborServer:
                 },
                 "writes": {
                     name: dict(w) for name, w in self._tenant_writes.items()
+                },
+                "workloads": {
+                    name: dict(w)
+                    for name, w in self._tenant_workloads.items()
                 },
                 "buckets": buckets,
                 "placement": self._placement_summary(),
@@ -1013,6 +1112,58 @@ class NeighborServer:
                 )
                 w[counter] += rows
                 w["write_ops"] += 1
+                ticket._result = out
+                self._served += 1
+                self._meter(name, ticket.spec, ticket.metric).latencies.append(
+                    time.perf_counter() - ticket.submitted_at
+                )
+                ticket._event.set()
+            served += 1
+        return served
+
+    # workload execution ------------------------------------------------
+
+    def _run_workloads(self, name, batch) -> int:
+        """Run one batch of graph-workload tickets in submission order.
+        Each finalizes its ticket directly (the result is one whole
+        artifact, not per-row assembly); the build's self-query runs
+        under ``_serve_lock`` like any other plan execution — one query
+        stream per server at a time."""
+        # imported here, not at module top: repro.workloads imports
+        # repro.api.query, and importing it while repro.api's own
+        # __init__ is still executing would cycle
+        from repro.workloads import build_knn_graph, dbscan
+
+        index = self._indexes[name]
+        served = 0
+        for ticket, op, _ in batch:
+            kind, kw = op
+            rows = int(index.n_points)
+            try:
+                with self._serve_lock:
+                    if kind == "graph":
+                        out = build_knn_graph(
+                            index, kw["k"], symmetrize=kw["symmetrize"],
+                            metric=kw["metric"], chunk_rows=kw["chunk_rows"],
+                        )
+                        counter = "graphs"
+                    else:
+                        out = dbscan(
+                            index, kw["eps"], kw["min_pts"],
+                            metric=kw["metric"], chunk_rows=kw["chunk_rows"],
+                        )
+                        counter = "clusters"
+            except BaseException as e:
+                with self._lock:
+                    self._fail(ticket, e)
+                served += 1
+                continue
+            with self._lock:
+                w = self._tenant_workloads.setdefault(
+                    name, {"graphs": 0, "clusters": 0, "workload_rows": 0}
+                )
+                w[counter] += 1
+                w["workload_rows"] += rows
                 ticket._result = out
                 self._served += 1
                 self._meter(name, ticket.spec, ticket.metric).latencies.append(

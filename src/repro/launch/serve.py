@@ -27,6 +27,14 @@ or neighbor-search serving through the ``NeighborServer`` front-end.
     PYTHONPATH=src python -m repro.launch.serve --mode knn \
         --arrival closed --batches 6 --batch-size 512
 
+    # graph workloads: build the resident cloud's kNN graph, or DBSCAN-
+    # cluster it, through the server's workload queue (submit_graph /
+    # submit_cluster tickets)
+    PYTHONPATH=src python -m repro.launch.serve --mode graph \
+        --backend sharded --shards 8 --k 8 --symmetrize union
+    PYTHONPATH=src python -m repro.launch.serve --mode dbscan \
+        --backend trueknn --eps 1.5 --min-pts 8
+
     # mutating tenant: a Poisson write stream (--mutate writes/second of
     # inserts and deletes through the server's write queue) interleaves
     # with the read loop; the loop runs twice — compaction on, then off —
@@ -364,9 +372,77 @@ def _run_knn(args):
         )
 
 
+def _run_workload(args):
+    """Graph workloads through the server's workload queue: build the
+    resident index, register it as a tenant, and submit one
+    ``submit_graph`` (``--mode graph``) or ``submit_cluster``
+    (``--mode dbscan``) ticket — the batch-analytics serving shape."""
+    from repro.api import NeighborServer, build_index
+    from repro.core import make_dataset
+
+    pts = make_dataset(args.dataset, args.n, seed=0)
+    cfg = {}
+    if args.backend == "sharded":
+        cfg["n_shards"] = args.shards
+        cfg["placement"] = args.placement
+    t0 = time.perf_counter()
+    index = build_index(pts, backend=args.backend, **cfg)
+    print(
+        f"dataset resident: {args.n} {args.dataset} points "
+        f"(backend={args.backend}, index={args.index!r}), built in "
+        f"{(time.perf_counter()-t0)*1e3:.0f} ms"
+    )
+    server = NeighborServer(indexes={args.index: index})
+    t0 = time.perf_counter()
+    if args.mode == "graph":
+        ticket = server.submit_graph(
+            args.k, symmetrize=args.symmetrize, metric=args.metric,
+            index=args.index,
+        )
+        g = ticket.result(timeout=600)
+        dt = time.perf_counter() - t0
+        deg = g.counts
+        print(
+            f"kNN graph (k={g.k}, symmetrize={g.symmetrize!r}): "
+            f"{g.n} nodes, {g.n_edges} edges in {dt:.2f}s "
+            f"({g.n/dt:.0f} rows/s); degree min {int(deg.min())} "
+            f"median {int(np.median(deg))} max {int(deg.max())}; "
+            f"generation {g.generation}"
+        )
+    else:
+        eps = args.eps
+        if eps is None:
+            # size eps like the serving radius default: median k-th-NN
+            # distance of a warm sample (see warm_default_radius)
+            from repro.api import KnnSpec, warm_default_radius
+
+            rng = np.random.default_rng(1)
+            warm = index.query(
+                pts[rng.integers(0, args.n, min(args.n, 512))],
+                KnnSpec(args.min_pts), metric=args.metric,
+            )
+            eps = warm_default_radius(warm.dists, index)
+            print(f"--eps not given; using warm median {eps:.4f}")
+        ticket = server.submit_cluster(
+            eps, args.min_pts, metric=args.metric, index=args.index
+        )
+        c = ticket.result(timeout=600)
+        dt = time.perf_counter() - t0
+        sizes = np.bincount(c.labels[c.labels >= 0]) if c.n_clusters else []
+        print(
+            f"DBSCAN(eps={c.eps:.4f}, min_pts={c.min_pts}): "
+            f"{c.n_clusters} clusters, {int(c.core.sum())} core points, "
+            f"{c.n_noise} noise of {len(c.labels)} in {dt:.2f}s; "
+            f"largest cluster {int(max(sizes)) if len(sizes) else 0} rows"
+        )
+    w = server.stats()["workloads"].get(args.index, {})
+    print(f"tenant {args.index!r} workload meter: {w}")
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", choices=["lm", "knn"], default="lm")
+    ap.add_argument("--mode", choices=["lm", "knn", "graph", "dbscan"],
+                    default="lm")
     # lm mode
     ap.add_argument("--arch", default="qwen3-0.6b")
     ap.add_argument("--requests", type=int, default=16)
@@ -413,6 +489,15 @@ def main():
                     "for each")
     ap.add_argument("--cache-size", type=int, default=4096,
                     help="NeighborServer LRU result-cache rows (0 disables)")
+    # graph/dbscan workload modes
+    ap.add_argument("--eps", type=float, default=None,
+                    help="DBSCAN neighborhood radius (--mode dbscan); "
+                    "defaults to the warm median k-th-NN distance")
+    ap.add_argument("--min-pts", type=int, default=8,
+                    help="DBSCAN core-point density threshold")
+    ap.add_argument("--symmetrize", choices=["union", "mutual", "none"],
+                    default="union",
+                    help="kNN-graph symmetrization mode (--mode graph)")
     ap.add_argument("--explain", action="store_true",
                     help="print each tenant's active structured plan trees "
                     "(plan.explain()) once at startup")
@@ -432,6 +517,8 @@ def main():
         ).strip()
     if args.mode == "knn":
         _run_knn(args)
+    elif args.mode in ("graph", "dbscan"):
+        _run_workload(args)
     else:
         _run_lm(args)
 

@@ -1,0 +1,33 @@
+"""Graph workloads on the neighbor-search fabric.
+
+Batch analytics whose hot loop IS neighbor search: kNN-graph
+construction (:func:`build_knn_graph`) and DBSCAN density clustering
+(:func:`dbscan`), both driven through the planner's ``AllPairsSpec``
+self-query route so every backend — brute, trueknn, sharded, placed,
+mutable — serves them with identical, deterministic answers.
+"""
+
+from .cluster import DbscanResult, dbscan
+from .graph import (
+    KnnGraph,
+    build_knn_graph,
+    ids_to_rows,
+    snapshot_ids,
+    symmetrize_edges,
+)
+from .unionfind import connected_components, uf_build, uf_find, uf_roots, uf_union
+
+__all__ = [
+    "DbscanResult",
+    "KnnGraph",
+    "build_knn_graph",
+    "connected_components",
+    "dbscan",
+    "ids_to_rows",
+    "snapshot_ids",
+    "symmetrize_edges",
+    "uf_build",
+    "uf_find",
+    "uf_roots",
+    "uf_union",
+]

@@ -1,0 +1,529 @@
+"""Graph workloads: AllPairsSpec routing, kNN-graph construction, DBSCAN.
+
+The subsystem's exactness story is layered and each layer is asserted
+here:
+
+* the union-find fold is idempotent and commutative (property tests), so
+  component labels are a function of the edge *set*;
+* ``AllPairsSpec`` lowers to the self-query bucket every backend already
+  serves exactly, and its chunked execution is bit-identical to the
+  unchunked one;
+* kNN-graph CSR arrays and DBSCAN labels are therefore
+  ``np.array_equal`` across brute / trueknn / sharded / placed;
+* DBSCAN labels match an independent BFS reference over float64
+  neighborhoods, across all four metrics, including noise points and the
+  inclusive ``d == eps`` boundary.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.api import (
+    AllPairsSpec,
+    KnnSpec,
+    NeighborServer,
+    RangeSpec,
+    build_index,
+    make_mutable,
+)
+from repro.api.metrics import get_metric
+from repro.api.planner import resolve_self_queries
+from repro.core import make_dataset
+from repro.workloads import (
+    DbscanResult,
+    KnnGraph,
+    build_knn_graph,
+    connected_components,
+    dbscan,
+    symmetrize_edges,
+    uf_build,
+    uf_roots,
+    uf_union,
+)
+
+METRICS = ["l2", "l1", "linf", "cosine"]
+BACKENDS = ["brute", "trueknn", "sharded"]
+
+PTS = make_dataset("porto", 300, seed=3)
+
+# four well-separated blobs along the space diagonal: the morton
+# partition's equal-count cut aligns shard == blob, the geometry where
+# the sharded self-batch pre-pass should prove most rows interior
+_rng = np.random.default_rng(0)
+BLOBS = np.concatenate([
+    np.full(3, 100.0 * i, np.float32)
+    + _rng.normal(scale=1.0, size=(64, 3)).astype(np.float32)
+    for i in range(4)
+])
+
+
+def _index(backend, pts=PTS):
+    cfg = {}
+    if backend == "sharded":
+        cfg["n_shards"] = 4
+    return build_index(pts, backend=backend, **cfg)
+
+
+# ------------------------------------------------------ union-find algebra
+
+
+def _random_edges(rng, n, m):
+    return rng.integers(0, n, size=(m, 2))
+
+
+@settings(max_examples=25)
+@given(seed=st.integers(0, 10_000), n=st.integers(2, 40))
+def test_unionfind_idempotent(seed, n):
+    rng = np.random.default_rng(seed)
+    edges = _random_edges(rng, n, 3 * n)
+    once = connected_components(n, edges)
+    twice = connected_components(n, np.concatenate([edges, edges]))
+    assert np.array_equal(once, twice)
+
+
+@settings(max_examples=25)
+@given(seed=st.integers(0, 10_000), n=st.integers(2, 40))
+def test_unionfind_commutative(seed, n):
+    rng = np.random.default_rng(seed)
+    edges = _random_edges(rng, n, 3 * n)
+    base = connected_components(n, edges)
+    for _ in range(3):
+        perm = rng.permutation(len(edges))
+        assert np.array_equal(base, connected_components(n, edges[perm]))
+
+
+@settings(max_examples=25)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 40))
+def test_unionfind_min_label_roots(seed, n):
+    """Each node's root is the minimum member of its component (checked
+    against an independent BFS component sweep)."""
+    rng = np.random.default_rng(seed)
+    edges = _random_edges(rng, n, 2 * n)
+    roots = connected_components(n, edges)
+    adj = [[] for _ in range(n)]
+    for a, b in edges:
+        adj[a].append(int(b))
+        adj[b].append(int(a))
+    seen = np.zeros(n, bool)
+    for s in range(n):
+        if seen[s]:
+            continue
+        comp, stack = [], [s]
+        seen[s] = True
+        while stack:
+            u = stack.pop()
+            comp.append(u)
+            for v in adj[u]:
+                if not seen[v]:
+                    seen[v] = True
+                    stack.append(v)
+        assert (roots[comp] == min(comp)).all()
+
+
+def test_unionfind_union_returns_min_root():
+    parent = uf_build(5)
+    assert uf_union(parent, 3, 4) == 3
+    assert uf_union(parent, 4, 1) == 1
+    assert uf_union(parent, 1, 3) == 1  # already merged: root unchanged
+    assert np.array_equal(uf_roots(parent), [0, 1, 2, 1, 1])
+
+
+# ------------------------------------------------------ AllPairsSpec routing
+
+
+def test_all_pairs_spec_validation():
+    with pytest.raises(ValueError):
+        AllPairsSpec(mode="bogus")
+    with pytest.raises(ValueError):
+        AllPairsSpec(5, mode="knn", radius=1.0)  # knn takes k, not radius
+    with pytest.raises(ValueError):
+        AllPairsSpec(5, mode="range")  # range needs radius
+    with pytest.raises(ValueError):
+        AllPairsSpec(5, mode="range", radius=1.0)  # not both
+    with pytest.raises(ValueError):
+        AllPairsSpec(0)
+    with pytest.raises(ValueError):
+        AllPairsSpec(3, chunk_rows=0)
+    assert AllPairsSpec(3).lowered() == KnnSpec(3)
+    assert AllPairsSpec(mode="range", radius=2.0).lowered() == RangeSpec(2.0)
+
+
+def test_all_pairs_matches_self_query():
+    idx = _index("brute")
+    ap = idx.query(None, AllPairsSpec(6))
+    direct = idx.query(None, KnnSpec(6))
+    assert np.array_equal(ap.dists, direct.dists)
+    assert np.array_equal(ap.idxs, direct.idxs)
+    assert ap.timings["plan"] == "all_pairs"
+
+
+def test_all_pairs_rejects_explicit_queries():
+    idx = _index("brute")
+    with pytest.raises(ValueError):
+        idx.query(PTS[:10].copy(), AllPairsSpec(4))
+
+
+def test_all_pairs_k_capped_by_cloud():
+    idx = _index("brute")
+    with pytest.raises(ValueError):
+        idx.query(None, AllPairsSpec(len(PTS)))  # only n-1 possible others
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_all_pairs_chunked_bit_identical_knn(backend):
+    idx = _index(backend)
+    whole = idx.query(None, AllPairsSpec(5))
+    for chunk in (64, 100, 299):
+        part = idx.query(None, AllPairsSpec(5, chunk_rows=chunk))
+        assert np.array_equal(whole.dists, part.dists), (backend, chunk)
+        assert np.array_equal(whole.idxs, part.idxs), (backend, chunk)
+        assert part.timings["plan"] == f"all_pairs/chunked={chunk}"
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_all_pairs_chunked_bit_identical_range(backend):
+    idx = _index(backend)
+    whole = idx.query(None, AllPairsSpec(mode="range", radius=0.01))
+    part = idx.query(
+        None, AllPairsSpec(mode="range", radius=0.01, chunk_rows=77)
+    )
+    assert np.array_equal(whole.offsets, part.offsets)
+    assert np.array_equal(whole.idxs, part.idxs)
+    assert np.array_equal(whole.dists, part.dists)
+    # self-excluded: no row may list itself
+    rows = np.repeat(np.arange(len(PTS)), whole.counts)
+    assert (whole.idxs != rows).all()
+
+
+def test_all_pairs_empty_cloud():
+    idx = build_index(np.empty((0, 3), np.float32), backend="brute")
+    res = idx.query(None, AllPairsSpec(3))
+    assert res.dists.shape == (0, 3)
+    res = idx.query(None, AllPairsSpec(mode="range", radius=1.0))
+    assert res.counts.shape == (0,)
+
+
+# ------------------------------------------------ centralized self-detection
+
+
+def test_resolve_self_queries_identity_not_equality():
+    idx = _index("brute")
+    assert resolve_self_queries(idx, None) is None
+    assert resolve_self_queries(idx, idx.points) is None
+    copy = idx.points.copy()
+    assert resolve_self_queries(idx, copy) is copy
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_own_points_handle_gets_self_exclusion(backend):
+    """Passing the index's own resident array is the self bucket (self
+    excluded); an equal copy is a foreign batch (self at distance 0)."""
+    idx = _index(backend)
+    own = idx.query(idx.points, KnnSpec(4))
+    self_q = idx.query(None, KnnSpec(4))
+    assert np.array_equal(own.dists, self_q.dists)
+    assert np.array_equal(own.idxs, self_q.idxs)
+    foreign = idx.query(idx.points.copy(), KnnSpec(4))
+    assert np.array_equal(foreign.idxs[:, 0], np.arange(len(PTS)))
+    assert (foreign.dists[:, 0] == 0).all()
+
+
+def test_prepared_plan_resolves_self_queries():
+    idx = _index("trueknn")
+    plan = idx.prepare(KnnSpec(4))
+    assert np.array_equal(
+        plan(idx.points).idxs, idx.query(None, KnnSpec(4)).idxs
+    )
+
+
+# ----------------------------------------------- device-buffer reuse counter
+
+
+def test_trueknn_query_upload_skips():
+    idx = _index("trueknn")
+    assert idx.stats().get("query_upload_skips", 0) == 0
+    idx.query(None, KnnSpec(4))
+    skips = idx.stats()["query_upload_skips"]
+    assert skips > 0
+    # foreign batches never skip the upload
+    idx.query(PTS[:32].copy(), KnnSpec(4))
+    assert idx.stats()["query_upload_skips"] == skips
+    idx.query(None, RangeSpec(0.01))
+    assert idx.stats()["query_upload_skips"] > skips
+
+
+# ------------------------------------------- sharded self-batch locality
+
+
+def test_sharded_self_batch_counters():
+    idx = build_index(BLOBS, backend="sharded", n_shards=4)
+    res = idx.query(None, KnnSpec(8))
+    st_ = idx.stats()
+    # blob-aligned shards: every row's local kth beats every foreign bound
+    assert st_["self_local_rows"] == len(BLOBS)
+    assert st_["self_boundary_rows"] == 0
+    assert res.timings["self_local_rows"] == len(BLOBS)
+    # boundary-only shared-cut visits: the only per-shard visits were the
+    # local pre-pass itself (one per row), everything else was pruned
+    assert st_["shard_visits"] == len(BLOBS)
+    # answers still exact
+    oracle = build_index(BLOBS, backend="brute").query(None, KnnSpec(8))
+    assert np.array_equal(res.dists, oracle.dists)
+    assert np.array_equal(res.idxs, oracle.idxs)
+
+
+def test_sharded_self_batch_exact_on_mixed_shards():
+    """Overlapping shard boxes (porto data): few/no rows prove interior,
+    but the pre-pass + boundary rounds must still be exact."""
+    idx = _index("sharded")
+    res = idx.query(None, KnnSpec(7))
+    st_ = idx.stats()
+    assert st_["self_local_rows"] + st_["self_boundary_rows"] == len(PTS)
+    oracle = _index("brute").query(None, KnnSpec(7))
+    assert np.array_equal(res.dists, oracle.dists)
+    assert np.array_equal(res.idxs, oracle.idxs)
+
+
+# ------------------------------------------------------------- kNN graphs
+
+
+def _edge_set(g: KnnGraph):
+    rows = np.repeat(np.arange(g.n), g.counts)
+    return set(zip(rows.tolist(), g.indices.tolist()))
+
+
+@pytest.mark.parametrize("mode", ["none", "union", "mutual"])
+def test_knn_graph_symmetrize_vs_reference(mode):
+    idx = _index("brute")
+    k = 5
+    g = build_knn_graph(idx, k, symmetrize=mode)
+    res = idx.query(None, KnnSpec(k))
+    directed = set()
+    for i in range(len(PTS)):
+        for j in res.idxs[i]:
+            directed.add((i, int(j)))
+    if mode == "none":
+        want = directed
+    elif mode == "union":
+        want = directed | {(j, i) for i, j in directed}
+    else:
+        want = {(i, j) for i, j in directed if (j, i) in directed}
+    assert _edge_set(g) == want
+    # rows sorted by (dist, col); dists bitwise symmetric under union
+    for i in (0, 17, len(PTS) - 1):
+        cols, dd = g.neighbors(i)
+        order = np.lexsort((cols, dd))
+        assert np.array_equal(order, np.arange(len(cols)))
+    if mode == "union":
+        lut = {(int(r), int(c)): float(x)
+               for r, c, x in zip(np.repeat(np.arange(g.n), g.counts),
+                                  g.indices, g.dists)}
+        for (i, j), x in lut.items():
+            assert lut[(j, i)] == x
+
+
+def test_symmetrize_edges_rejects_unknown_mode():
+    with pytest.raises(ValueError):
+        symmetrize_edges([0], [1], [1.0], 2, "both")
+    with pytest.raises(ValueError):
+        build_knn_graph(_index("brute"), 3, symmetrize="both")
+
+
+def test_knn_graph_identity_across_backends():
+    graphs = {}
+    for backend in BACKENDS + ["placed"]:
+        if backend == "placed":
+            idx = build_index(
+                PTS, backend="sharded", n_shards=4, placement="devices"
+            )
+        else:
+            idx = _index(backend)
+        graphs[backend] = build_knn_graph(idx, 6)
+    ref = graphs["brute"]
+    for backend, g in graphs.items():
+        assert np.array_equal(ref.indptr, g.indptr), backend
+        assert np.array_equal(ref.indices, g.indices), backend
+        assert np.array_equal(ref.dists, g.dists), backend
+        assert g.n_edges == int(ref.indptr[-1])
+
+
+def test_knn_graph_mutable_generation_and_ids():
+    base = _index("trueknn", PTS[:200])
+    idx = make_mutable(base)
+    g0 = build_knn_graph(idx, 4)
+    assert g0.ids is not None and g0.n == 200
+    idx.insert(PTS[200:260])
+    idx.delete(np.arange(10))
+    g1 = build_knn_graph(idx, 4)
+    assert g1.generation > g0.generation
+    assert g1.n == 250
+    # neighbor columns are ROW positions (the stable-id remap happened):
+    # rebuilt immutable over the same snapshot gives the identical graph
+    live_pts, live_ids = idx.snapshot()
+    flat = build_knn_graph(build_index(live_pts, backend="trueknn"), 4)
+    assert np.array_equal(g1.indptr, flat.indptr)
+    assert np.array_equal(g1.indices, flat.indices)
+    assert np.array_equal(g1.dists, flat.dists)
+    assert np.array_equal(g1.ids, live_ids)
+
+
+# ----------------------------------------------------------------- DBSCAN
+
+
+def _dbscan_reference(pts, eps, min_pts, metric="l2"):
+    """Independent textbook DBSCAN: float64 neighborhoods, BFS cluster
+    expansion, same deterministic tie rules as the driver."""
+    D = get_metric(metric).pairwise(pts, pts)
+    np.fill_diagonal(D, np.inf)
+    neigh = D <= eps
+    core = neigh.sum(1) + 1 >= min_pts
+    n = len(pts)
+    labels = np.full(n, -1, np.int64)
+    cluster = 0
+    for s in range(n):  # ascending seed order == ascending min member
+        if not core[s] or labels[s] >= 0:
+            continue
+        stack = [s]
+        labels[s] = cluster
+        while stack:
+            u = stack.pop()
+            for v in np.flatnonzero(neigh[u]):
+                if core[v] and labels[v] < 0:
+                    labels[v] = cluster
+                    stack.append(v)
+        cluster += 1
+    for p in range(n):  # border points: minimum-labeled core neighbor
+        if labels[p] >= 0 or core[p]:
+            continue
+        cn = np.flatnonzero(neigh[p] & core)
+        if cn.size:
+            labels[p] = labels[cn].min()
+    return labels, core
+
+
+def _safe_eps(pts, metric, target):
+    """An eps no pairwise distance sits within 1e-4 of, nearest ``target``
+    quantile — float32 engines and the float64 reference then agree on
+    every membership decision."""
+    D = get_metric(metric).pairwise(pts, pts)
+    vals = np.unique(D[np.triu_indices(len(pts), 1)])
+    lo = vals[int(len(vals) * target)]
+    hi = vals[vals > lo + 2e-4].min()
+    return float((lo + hi) / 2)
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_dbscan_matches_reference(metric):
+    pts = PTS[:150]
+    eps = _safe_eps(pts, metric, 0.02)
+    idx = build_index(pts, backend="brute")
+    got = dbscan(idx, eps, 4, metric=metric)
+    want_labels, want_core = _dbscan_reference(pts, eps, 4, metric)
+    assert np.array_equal(got.core, want_core)
+    assert np.array_equal(got.labels, want_labels)
+    assert got.n_clusters == int(want_labels.max()) + 1
+    assert got.n_noise == int((want_labels < 0).sum())
+    assert got.n_noise > 0  # the chosen quantile leaves genuine noise
+
+
+def test_dbscan_eps_boundary_inclusive():
+    """Points exactly eps apart (exact float arithmetic) count toward the
+    neighborhood: the same ``<=`` form as range queries."""
+    pts = np.float32([[0, 0], [3, 0], [6, 0], [100, 100]])
+    idx = build_index(pts, backend="brute")
+    res = dbscan(idx, 3.0, 2)  # d(0,1) == d(1,2) == eps exactly
+    assert res.core.tolist() == [True, True, True, False]
+    assert res.labels.tolist() == [0, 0, 0, -1]
+    # just under the boundary nothing connects
+    res = dbscan(idx, 2.9999, 2)
+    assert res.n_clusters == 0 and res.n_noise == 4
+
+
+def test_dbscan_min_pts_one_everything_core():
+    idx = build_index(PTS[:60], backend="brute")
+    res = dbscan(idx, 1e-9, 1)
+    assert res.core.all()
+    assert res.n_noise == 0
+    assert res.n_clusters == 60  # nobody within eps: all singletons
+
+
+def test_dbscan_identity_across_backends():
+    eps = _safe_eps(BLOBS, "l2", 0.2)
+    results = {}
+    for backend in BACKENDS + ["placed"]:
+        if backend == "placed":
+            idx = build_index(
+                BLOBS, backend="sharded", n_shards=4, placement="devices"
+            )
+        else:
+            cfg = {"n_shards": 4} if backend == "sharded" else {}
+            idx = build_index(BLOBS, backend=backend, **cfg)
+        results[backend] = dbscan(idx, eps, 5)
+    ref = results["brute"]
+    assert ref.n_clusters == 4  # the four blobs
+    for backend, r in results.items():
+        assert np.array_equal(ref.labels, r.labels), backend
+        assert np.array_equal(ref.core, r.core), backend
+
+
+def test_dbscan_result_fields():
+    idx = _index("brute", BLOBS)
+    res = dbscan(idx, 1.0, 5, chunk_rows=100)
+    assert isinstance(res, DbscanResult)
+    assert res.backend == "brute" and res.metric == "l2"
+    assert res.eps == 1.0 and res.min_pts == 5
+    assert res.n_tests > 0 and res.generation == 0 and res.ids is None
+    with pytest.raises(ValueError):
+        dbscan(idx, 1.0, 0)
+
+
+# ------------------------------------------------------- server endpoints
+
+
+def test_server_submit_graph_and_cluster():
+    idx = _index("trueknn", BLOBS)
+    server = NeighborServer(idx)
+    tg = server.submit_graph(6, symmetrize="mutual")
+    tc = server.submit_cluster(1.0, 5)
+    g = tg.result(timeout=120)
+    c = tc.result(timeout=120)
+    direct_g = build_knn_graph(idx, 6, symmetrize="mutual")
+    assert np.array_equal(g.indptr, direct_g.indptr)
+    assert np.array_equal(g.indices, direct_g.indices)
+    assert np.array_equal(c.labels, dbscan(idx, 1.0, 5).labels)
+    w = server.stats()["workloads"]["default"]
+    assert w == {"graphs": 1, "clusters": 1, "workload_rows": 2 * len(BLOBS)}
+    # metered buckets exist with the workload spec kinds
+    buckets = server.stats()["buckets"]
+    assert any("/graph/k=6/" in key for key in buckets)
+    assert any("/cluster/" in key for key in buckets)
+
+
+def test_server_workload_validation_fails_fast():
+    server = NeighborServer(_index("brute"))
+    with pytest.raises(ValueError):
+        server.submit_graph(0)
+    with pytest.raises(ValueError):
+        server.submit_graph(3, symmetrize="both")
+    with pytest.raises(ValueError):
+        server.submit_cluster(-1.0, 4)
+    with pytest.raises(ValueError):
+        server.submit_cluster(1.0, 0)
+    with pytest.raises(KeyError):
+        server.submit_graph(3, index="nope")
+
+
+def test_server_workload_orders_against_writes():
+    """A graph submitted after an insert sees the inserted rows — the
+    workload rides the read side of the tenant's write barrier."""
+    idx = make_mutable(_index("trueknn", PTS[:100]))
+    server = NeighborServer(idx)
+    server.submit_insert(PTS[100:140])
+    t = server.submit_graph(4)
+    g = t.result(timeout=120)
+    assert g.n == 140
+    assert server.stats()["workloads"]["default"]["workload_rows"] == 140
